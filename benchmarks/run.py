@@ -1,0 +1,216 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+* kmeans_*        — paper Fig 4 / Table 3 (iteration time, single vs teamed)
+* moldyn_*        — paper Figs 5–6 (step time, allreduce share, tile balance)
+* plham_*         — paper Fig 7 (no-lb vs level-extremes vs proportional,
+                    even / uneven / disturbed clusters)
+* reloc_*         — §5.3 relocation engine micro-benchmarks (host + SPMD)
+* kernel_*        — Pallas-kernel ops (XLA path wall time on CPU; the
+                    Pallas path is the TPU target, validated in tests)
+* roofline_table  — aggregates experiments/dryrun JSONs (§Roofline)
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+
+def _t(fn, n=3, warmup=1):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+def bench_kmeans():
+    from repro.apps import KMeans
+    for places, n in [(1, 20000), (4, 20000), (8, 20000)]:
+        km = KMeans(n_places=places, n_points=n, dim=3, k=16)
+        us = _t(km.iterate, n=3)
+        row(f"kmeans_teamed_p{places}", us,
+            f"inertia={km.inertia():.0f};points={n}")
+    # weak scaling: points grow with places (paper's setup)
+    for places in (1, 4, 8):
+        km = KMeans(n_places=places, n_points=8000 * places, dim=3, k=16)
+        us = _t(km.iterate, n=2)
+        row(f"kmeans_weak_p{places}", us, f"points={8000 * places}")
+
+
+def bench_moldyn():
+    from repro.apps import MolDyn
+    for places in (1, 4):
+        md = MolDyn(n_places=places, n_particles=125, ndivide=5)
+        us = _t(md.step, n=2)
+        sync = md.replicas_in_sync()
+        row(f"moldyn_step_p{places}", us,
+            f"in_sync={sync};allreduce_bytes={md.allreduce_bytes}")
+    # tile balance quality of the teamed split (paper Fig 3)
+    from repro.core import RangedListProduct
+    prod = RangedListProduct.new_product_triangle(512)
+    splits = prod.teamed_split(8, 8, 4, seed=0)
+    pairs = np.array([s.total_pairs() for s in splits])
+    row("moldyn_tile_balance", 0.0,
+        f"max/min={pairs.max() / max(pairs.min(), 1):.3f}")
+
+
+def bench_plham():
+    from repro.apps import PlhamSim
+    configs = [
+        ("evenA", dict(n_places=5, speeds=(1, 1, 1, 1, 1))),
+        ("unevenC", dict(n_places=6, speeds=(1, 1, 1, 1, 1, 3))),
+        ("disturbA", dict(n_places=5, speeds=(1, 1, 1, 1, 1),
+                          disturb_period=25)),
+    ]
+    for cname, kw in configs:
+        base = None
+        for strat in ("none", "level_extremes", "proportional"):
+            sim = PlhamSim(n_agents=800, strategy=strat, lb_period=5,
+                           seed=1, **kw)
+            t0 = time.perf_counter()
+            sim_t = sim.run(100)
+            wall_us = (time.perf_counter() - t0) * 1e6 / 100
+            if strat == "none":
+                base = sim_t
+            gain = (base - sim_t) / base * 100
+            row(f"plham_{cname}_{strat}", wall_us,
+                f"simtime={sim_t:.0f};gain_pct={gain:.1f};"
+                f"reloc_bytes={sim.relocated}")
+
+
+def bench_relocation():
+    from repro.core import (CollectiveMoveManager, DistArray, LongRange,
+                            PlaceGroup)
+    n, width = 200_000, 8
+    g = PlaceGroup(8)
+    col = DistArray(g, track=True)
+    rows = np.random.default_rng(0).normal(size=(n, width))
+    for p, r in enumerate(LongRange(0, n).split(8)):
+        col.add_chunk(p, r, rows[r.start:r.end])
+
+    def do_moves():
+        mm = CollectiveMoveManager(g)
+        for p in range(8):
+            col.move_at_sync_count(p, 2000, (p + 1) % 8, mm)
+        mm.sync()
+        col.update_dist()
+
+    us = _t(do_moves, n=3)
+    bytes_per_sync = 8 * 2000 * width * 8
+    row("reloc_host_16k_entries", us,
+        f"GBps={bytes_per_sync / us / 1e3:.2f}")
+
+    # SPMD half: jit cost of the capacity pack (the compute half of the
+    # device-side Alltoallv); collective timing needs real links
+    import jax
+    import jax.numpy as jnp
+    from repro.core.relocation import _pack_by_dest
+    x = jnp.asarray(rows[:16384].astype(np.float32))
+    dest = jnp.asarray(np.random.default_rng(1).integers(0, 64, 16384),
+                       dtype=jnp.int32)
+    pack = jax.jit(lambda x, d: _pack_by_dest(x, d, 64, 512)[0])
+    pack(x, dest).block_until_ready()
+    us = _t(lambda: pack(x, dest).block_until_ready(), n=5)
+    row("reloc_spmd_pack_16k", us,
+        f"GBps={16384 * width * 4 / us / 1e3:.2f}")
+
+
+def bench_kernels():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 8, 1024, 64)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 2, 1024, 64)).astype(np.float32))
+    att = jax.jit(lambda q, k, v: ops.attention(q, k, v, impl="xla"))
+    att(q, k, v).block_until_ready()
+    us = _t(lambda: att(q, k, v).block_until_ready(), n=5)
+    flops = 4 * 1 * 8 * 1024 * 1024 * 64 * 0.5
+    row("kernel_attention_1k", us, f"GFLOPs={flops / us / 1e3:.1f}")
+
+    x = jnp.asarray(rng.normal(size=(4, 2048, 256)).astype(np.float32))
+    a = jnp.asarray((0.5 + 0.49 * rng.random((4, 2048, 256))).astype(np.float32))
+    lru = jax.jit(lambda x, a: ops.rg_lru_scan(x, a, impl="xla")[0])
+    lru(x, a).block_until_ready()
+    us = _t(lambda: lru(x, a).block_until_ready(), n=5)
+    row("kernel_rg_lru_2k", us, f"elem_per_us={4 * 2048 * 256 / us:.0f}")
+
+    qm = jnp.asarray(rng.normal(size=(8, 512, 64)).astype(np.float32))
+    ig = jnp.asarray(rng.normal(size=(8, 512)).astype(np.float32))
+    fg = jnp.asarray((rng.normal(size=(8, 512)) + 2).astype(np.float32))
+    ml = jax.jit(lambda q, i, f: ops.mlstm(q, q, q, i, f, impl="xla"))
+    ml(qm, ig, fg).block_until_ready()
+    us = _t(lambda: ml(qm, ig, fg).block_until_ready(), n=3)
+    row("kernel_mlstm_512", us, "")
+
+
+def bench_train_smoke():
+    """End-to-end reduced-model train step (the quickstart path)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import Parallel, zoo
+    from repro.optim.adamw import AdamWConfig, adamw_init
+    from repro.train.step import build_train_step
+    par = Parallel(mesh=None)
+    for arch in ("qwen2_1_5b", "deepseek_v2_lite_16b"):
+        cfg = get_config(arch).reduced(n_layers=4, d_model=128, d_ff=256)
+        params = zoo.init_params(cfg, 0)
+        opt = AdamWConfig()
+        step, _, _ = build_train_step(cfg, par, opt)
+        state = adamw_init(params, opt)
+        rng = np.random.default_rng(0)
+        batch = {"tokens": rng.integers(0, cfg.vocab_size, (4, 64)).astype(np.int32),
+                 "labels": rng.integers(0, cfg.vocab_size, (4, 64)).astype(np.int32)}
+        params, state, m = step(params, state, batch)  # compile
+
+        def one():
+            nonlocal params, state, m
+            params, state, m = step(params, state, batch)
+            jax.tree_util.tree_leaves(params)[0].block_until_ready()
+
+        us = _t(one, n=3)
+        row(f"train_step_{arch}", us, f"loss={float(m['loss']):.3f}")
+
+
+def roofline_table():
+    d = Path("experiments/dryrun")
+    if not d.exists():
+        row("roofline_table", 0.0, "missing:run repro.launch.dryrun first")
+        return
+    for f in sorted(d.glob("*.json")):
+        j = json.loads(f.read_text())
+        if j.get("status") != "ok":
+            row(f"roofline_{f.stem}", 0.0, j.get("status", "?"))
+            continue
+        r = j["roofline"]
+        row(f"roofline_{f.stem}", 0.0,
+            f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};bn={r['bottleneck']};"
+            f"frac={r.get('roofline_fraction', 0):.3f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_kmeans()
+    bench_moldyn()
+    bench_plham()
+    bench_relocation()
+    bench_kernels()
+    bench_train_smoke()
+    roofline_table()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""PlhamJ load-balancing study (paper §6.3, Figs 7-8): even, uneven, and
+disturbed clusters under no-lb / level-extremes / proportional."""
+import sys
+sys.path.insert(0, "src")
+
+import numpy as np
+from repro.apps import PlhamSim
+
+
+def run(name, **kw):
+    print(f"--- {name} ---")
+    base = None
+    for strat in ("none", "level_extremes", "proportional"):
+        sim = PlhamSim(n_agents=1000, strategy=strat, lb_period=5, seed=1,
+                       **kw)
+        t = sim.run(150)
+        if base is None:
+            base = t
+        print(f"  {strat:15s} simtime={t:9.1f}  gain={100*(base-t)/base:5.1f}%"
+              f"  final_loads={sim.distribution_history[-1]}")
+        if strat == "level_extremes":
+            h = np.array(sim.distribution_history)
+            print(f"    distribution@iters[0,30,75,149]:"
+                  f" {h[0]}, {h[30]}, {h[75]}, {h[149]}")
+
+
+def main():
+    run("Config A: even 4+master", n_places=5)
+    run("Config C: 4 piccolos + harp(3x)", n_places=6,
+        speeds=(1, 1, 1, 1, 1, 3))
+    run("Config A + Disturb (moving 2.5x slowdown)", n_places=5,
+        disturb_period=30, disturb_factor=0.4)
+
+
+if __name__ == "__main__":
+    main()

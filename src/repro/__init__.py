@@ -1,0 +1,7 @@
+"""repro: relocatable distributed collections for JAX/TPU.
+
+Reproduction of Finnerty et al., "Supercharging the APGAS Programming
+Model with Relocatable Distributed Collections" (2022), as the
+distribution substrate of a multi-pod JAX training/serving framework.
+"""
+__version__ = "0.1.0"

@@ -1,0 +1,6 @@
+"""Paper applications on the collection substrate: K-Means, MolDyn, PlhamJ."""
+from .kmeans import AveragePosition, ClosestPoint, KMeans
+from .moldyn import MolDyn
+from .plham import PlhamSim
+
+__all__ = ["AveragePosition", "ClosestPoint", "KMeans", "MolDyn", "PlhamSim"]

@@ -1,0 +1,128 @@
+"""Distributed K-Means (paper §4 Listing 8, Renaissance-derived).
+
+Points live in a ``DistArray``; one iteration = local parallel
+assignment + two *teamed reductions* (AveragePosition, ClosestPoint) —
+exactly the paper's structure, with jnp as the intra-place vector
+engine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core import DistArray, LongRange, PlaceGroup, local_reduce, team_reduce
+
+__all__ = ["AveragePosition", "ClosestPoint", "KMeans"]
+
+
+class AveragePosition:
+    """Per-cluster position sums + counts (additive reducer, §4.7)."""
+
+    additive = True
+
+    def __init__(self, k: int, dim: int):
+        self.k, self.dim = k, dim
+
+    def new_reducer(self):
+        return {"sum": np.zeros((self.k, self.dim)),
+                "count": np.zeros((self.k,))}
+
+    def reduce(self, state, rows):
+        pts = rows[:, :self.dim]
+        cl = rows[:, self.dim].astype(int)
+        np.add.at(state["sum"], cl, pts)
+        np.add.at(state["count"], cl, 1.0)
+        return state
+
+    def merge(self, a, b):
+        return {"sum": a["sum"] + b["sum"], "count": a["count"] + b["count"]}
+
+    def centroids(self, state):
+        return state["sum"] / np.maximum(state["count"], 1.0)[:, None]
+
+
+class ClosestPoint:
+    """Per-cluster closest point to the average (min-merge reducer)."""
+
+    additive = False
+
+    def __init__(self, k: int, dim: int, avg: np.ndarray):
+        self.k, self.dim, self.avg = k, dim, avg
+
+    def new_reducer(self):
+        return {"best": np.full((self.k,), np.inf),
+                "coord": np.zeros((self.k, self.dim))}
+
+    def reduce(self, state, rows):
+        pts = rows[:, :self.dim]
+        cl = rows[:, self.dim].astype(int)
+        d = np.sum((pts - self.avg[cl]) ** 2, axis=1)
+        for c in range(self.k):
+            m = cl == c
+            if m.any():
+                i = np.argmin(np.where(m, d, np.inf))
+                if d[i] < state["best"][c]:
+                    state["best"][c] = d[i]
+                    state["coord"][c] = pts[i]
+        return state
+
+    def merge(self, a, b):
+        take_b = b["best"] < a["best"]
+        return {"best": np.where(take_b, b["best"], a["best"]),
+                "coord": np.where(take_b[:, None], b["coord"], a["coord"])}
+
+
+@dataclass
+class KMeans:
+    n_places: int
+    n_points: int
+    dim: int = 3
+    k: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.group = PlaceGroup(self.n_places)
+        self.points = DistArray(self.group, track=True)
+        centers = rng.normal(scale=4.0, size=(self.k, self.dim))
+        pts = (centers[rng.integers(0, self.k, self.n_points)]
+               + rng.normal(size=(self.n_points, self.dim)))
+        rows = np.concatenate([pts, np.zeros((self.n_points, 1))], axis=1)
+        for p, r in enumerate(LongRange(0, self.n_points).split(self.n_places)):
+            if r.size:
+                self.points.add_chunk(p, r, rows[r.start:r.end])
+        self.centroids = pts[rng.choice(self.n_points, self.k, replace=False)]
+        self.true_centers = centers
+
+    def assign_step(self):
+        """parallelForEach: assign each point to its nearest centroid."""
+        c = self.centroids
+
+        def assign(rows):
+            pts = rows[:, :self.dim]
+            d = ((pts[:, None, :] - c[None]) ** 2).sum(-1)
+            rows[:, self.dim] = np.argmin(d, axis=1)
+            return rows
+
+        for p in self.group.members:
+            self.points.map_chunks(p, assign)
+
+    def iterate(self) -> np.ndarray:
+        self.assign_step()
+        avg_r = AveragePosition(self.k, self.dim)
+        avg_state = team_reduce(self.points, avg_r)       # teamed reduction 1
+        avg = avg_r.centroids(avg_state)
+        cp_r = ClosestPoint(self.k, self.dim, avg)
+        cp_state = team_reduce(self.points, cp_r)         # teamed reduction 2
+        self.centroids = cp_state["coord"]
+        return self.centroids
+
+    def inertia(self) -> float:
+        total = 0.0
+        for p in self.group.members:
+            rows, _ = self.points.to_local_matrix(p)
+            pts = rows[:, :self.dim]
+            d = ((pts[:, None, :] - self.centroids[None]) ** 2).sum(-1)
+            total += float(np.min(d, axis=1).sum())
+        return total

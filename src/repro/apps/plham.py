@@ -1,0 +1,158 @@
+"""PlhamJ-style financial-market simulator (paper §4 / §6.3).
+
+The full round structure of Fig 2 on the collection substrate:
+ (1) market state broadcast (CachableArray),
+ (2) parallel order submission (agents → DistBag via collect_from),
+ (3) teamed gather of orders to the master,
+ (4) order matching on the master, overlapped with the optional
+     level-extremes rebalance of agents (LoadBalancer + relocation),
+ (5) contracted-trade dispatch by the tracked agent distribution
+     (DistMultiMap.relocate) + parallel agent updates.
+
+The cluster is simulated: each place has a speed factor, and the
+"Disturb" parasite periodically slows one host (paper §6.3) — simulated
+wall-clock = Σ per-place max of (agent work / speed).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import (CachableArray, CollectiveMoveManager, DistArray, DistBag,
+                    DistMultiMap, LevelExtremes, LoadBalancer, LongRange,
+                    PlaceGroup, Proportional)
+
+__all__ = ["PlhamSim"]
+
+
+@dataclass
+class PlhamSim:
+    n_places: int                      # agent-handling places (master = 0)
+    n_agents: int = 1200
+    lb_period: int = 10
+    strategy: str = "level_extremes"   # none | level_extremes | proportional
+    speeds: tuple = ()                 # per-place speed factors
+    disturb_period: int = 0            # iters between disturb moves (0=off)
+    disturb_factor: float = 0.4
+    seed: int = 0
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.rng = rng
+        self.group = PlaceGroup(self.n_places)
+        self.agents = DistArray(self.group, track=True)   # DistCol<Agent>
+        # agent rows: [cost_weight, wealth]; heterogeneous per-agent cost
+        rows = np.stack([0.5 + rng.random(self.n_agents),
+                         np.ones(self.n_agents)], axis=1)
+        workers = self.group.members[1:] if self.n_places > 1 \
+            else self.group.members
+        for i, r in enumerate(LongRange(0, self.n_agents).split(len(workers))):
+            if r.size:
+                self.agents.add_chunk(workers[i], r, rows[r.start:r.end])
+        self.markets = CachableArray(self.group,
+                                     [np.array([100.0, 0.0])], owner=0)
+        strat = {"none": None,
+                 "level_extremes": LevelExtremes(),
+                 "proportional": Proportional(damping=0.8)}[self.strategy]
+        self.workers = list(workers)
+        self.balancer = (LoadBalancer(len(self.workers), strategy=strat,
+                                      period=self.lb_period)
+                         if strat else None)
+        if not self.speeds:
+            self.speeds = tuple([1.0] * self.n_places)
+        self.iter = 0
+        self.sim_time = 0.0
+        self.distribution_history: list[np.ndarray] = []
+        self.relocated = 0
+
+    # ------------------------------------------------------------------
+    def _place_speed(self, p: int) -> float:
+        s = self.speeds[p]
+        if self.disturb_period:
+            victim = (self.iter // self.disturb_period) % self.n_places
+            if p == victim:
+                s *= self.disturb_factor
+        return s
+
+    def round(self) -> float:
+        """One simulation round; returns its simulated wall time."""
+        g = self.group
+        # (1) broadcast updated market state
+        self.markets.broadcast(lambda m: m.copy(), lambda local, u: u)
+
+        # (2) order submission: per-place parallel produce into a DistBag
+        orders = DistBag(g)
+        times = np.zeros(self.n_places)
+        for p in g.members:
+            if p == 0 and self.n_places > 1:
+                continue
+            work = 0.0
+            h = self.agents.handle(p)
+            for r in h.ranges():
+                rows = h.chunks[r]
+                work += float(rows[:, 0].sum())        # per-agent cost
+                n_ord = max(1, r.size // 4)
+                idx = self.rng.integers(r.start, r.end, n_ord)
+                orders.put_batch(p, list(np.stack(
+                    [idx, self.rng.normal(100, 1, n_ord)], axis=1)))
+            times[p] = work / self._place_speed(p)
+        submit_time = times.max()                       # barrier: slowest host
+
+        # (3) teamed gather of orders on the master
+        orders.team_gather(0)
+
+        # (4) match orders on master; optional balancing runs concurrently
+        all_orders = orders.items(0)
+        match_time = 0.2 * len(all_orders) / 100.0 / self._place_speed(0)
+        contracted = DistMultiMap(g)
+        for o in all_orders[: len(all_orders) // 2]:
+            contracted.put(0, int(o[0]), np.float32(o[1]))
+
+        lb_time = 0.0
+        if self.balancer:
+            # balance over the agent-handling places only (master holds no
+            # agents in the distributed setup — paper Config A)
+            workers = self.workers
+            w_times = np.maximum(times[workers], 1e-9)
+            loads = self.agents.get_distribution().loads(self.n_places)
+            self.balancer.record_all(w_times)
+            decision = self.balancer.step(loads[workers])
+            if decision and decision.moves:
+                mm = CollectiveMoveManager(g)
+                for src_i, dest_i, count in decision.moves:
+                    src, dest = workers[src_i], workers[dest_i]
+                    avail = self.agents.local_size(src)
+                    n = min(count, max(avail - 1, 0))
+                    if n:
+                        self.agents.move_at_sync_count(src, n, dest, mm)
+                if mm.pending():
+                    mm.sync()
+                    self.relocated += mm.last_payload_bytes
+                    self.agents.update_dist()
+                # relocation overlaps order handling (paper §4.5): only
+                # the excess over match_time costs wall time
+                lb_time = max(0.0, 0.01 - match_time)
+
+        # (5) dispatch contracted updates by the *current* distribution
+        dist = self.agents.get_distribution()
+        contracted.relocate(dist)
+        for p in g.members:
+            h = self.agents.handle(p)
+            for k in contracted.keys(p):
+                owner = dist.owner_of(k)
+                assert owner == p, "dispatch reached a stale owner"
+                for upd in contracted.get(p, k):
+                    h.set(k, h.get(k) * np.array([1.0, 1.0]))  # apply trade
+
+        self.iter += 1
+        t = submit_time + match_time + lb_time
+        self.sim_time += t
+        self.distribution_history.append(
+            dist.loads(self.n_places).copy())
+        return t
+
+    def run(self, iters: int) -> float:
+        for _ in range(iters):
+            self.round()
+        return self.sim_time

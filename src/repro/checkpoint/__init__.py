@@ -1,0 +1,1 @@
+from .manager import *  # noqa: F401,F403

@@ -1,0 +1,46 @@
+"""Assigned architecture configs (10) + shape cells.
+
+Each module exposes ``CONFIG`` (exact pool spec) — retrieve via
+``get_config(name)``; ``SHAPES`` defines the four assigned input-shape
+cells and ``cells_for(config)`` applies the per-family skip rules
+(see DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+from ..shapes import SHAPES, ShapeCell
+
+ARCH_IDS = [
+    "qwen2_1_5b",
+    "gemma2_27b",
+    "gemma3_12b",
+    "phi4_mini_3_8b",
+    "deepseek_v2_lite_16b",
+    "deepseek_v3_671b",
+    "qwen2_vl_2b",
+    "whisper_small",
+    "xlstm_350m",
+    "recurrentgemma_2b",
+]
+
+def get_config(name: str) -> ModelConfig:
+    key = name.replace("-", "_").replace(".", "_")
+    if key not in ARCH_IDS:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(f".{key}", __package__)
+    return mod.CONFIG
+
+
+def cells_for(cfg: ModelConfig) -> list[tuple[str, str]]:
+    """(shape_name, status) pairs; status 'run' or skip reason."""
+    out = []
+    for cell in SHAPES:
+        if cell.name == "long_500k" and cfg.pure_full_attention:
+            out.append((cell.name, "skip: full-attention long-context"))
+        elif cell.name == "long_500k" and cfg.is_encoder_decoder:
+            out.append((cell.name, "skip: enc-dec has no 500k context"))
+        else:
+            out.append((cell.name, "run"))
+    return out

@@ -1,0 +1,32 @@
+"""deepseek-v3-671b [moe] — MLA, 1 shared + 256 routed top-8, MTP
+[arXiv:2412.19437; hf]."""
+from ..models.config import LayerSlot, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=128,
+    n_kv_heads=128,
+    d_ff=18432,                 # dense first-3-layer FFN
+    vocab_size=129280,
+    pattern=(LayerSlot("mla", "moe"),),
+    first_dense_layers=3,
+    n_experts=256,
+    n_shared_experts=1,
+    top_k=8,
+    d_ff_expert=2048,
+    mla=True,
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    qk_nope_dim=128,
+    qk_rope_dim=64,
+    v_head_dim=128,
+    mtp_depth=1,
+    rope_theta=10000.0,
+    tie_embeddings=False,
+    loss_chunk=256,
+    remat="full",
+    param_dtype="bfloat16",
+)

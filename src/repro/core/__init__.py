@@ -1,0 +1,47 @@
+"""Relocatable distributed collections — the paper's contribution.
+
+Finnerty, Kamada, Kawanishi, Ohta: "Supercharging the APGAS Programming
+Model with Relocatable Distributed Collections" (2022), adapted to
+JAX/TPU.  See DESIGN.md for the APGAS→TPU mapping.
+"""
+from .accumulator import Accumulator, segment_accept
+from .balancer import BalanceDecision, LevelExtremes, LoadBalancer, Proportional
+from .collections import (
+    CachableArray,
+    CachableChunkedList,
+    DistArray,
+    DistBag,
+    DistIdMap,
+    DistMap,
+    DistMultiMap,
+    PlaceGroup,
+)
+from .distribution import DistributionDelta, LongRange, RangeDistribution
+from .product import RangedListProduct, Tile
+from .relocation import (
+    CollectiveMoveManager,
+    spmd_counts,
+    spmd_relocate,
+    spmd_relocate_back,
+)
+from .teamed import (
+    Reducer,
+    allgather1,
+    local_reduce,
+    spmd_allgather1,
+    spmd_team_reduce,
+    team_reduce,
+)
+
+__all__ = [
+    "Accumulator", "segment_accept",
+    "BalanceDecision", "LevelExtremes", "LoadBalancer", "Proportional",
+    "CachableArray", "CachableChunkedList", "DistArray", "DistBag",
+    "DistIdMap", "DistMap", "DistMultiMap", "PlaceGroup",
+    "DistributionDelta", "LongRange", "RangeDistribution",
+    "RangedListProduct", "Tile",
+    "CollectiveMoveManager", "spmd_counts", "spmd_relocate",
+    "spmd_relocate_back",
+    "Reducer", "allgather1", "local_reduce", "spmd_allgather1",
+    "spmd_team_reduce", "team_reduce",
+]

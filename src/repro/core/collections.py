@@ -1,0 +1,570 @@
+"""Relocatable distributed collections (paper §3, Table 1).
+
+Local-handle semantics: a distributed collection is a set of *local
+handles*, one per place, linked by a global id.  All reads/writes go
+through a place's own handle; anything that crosses places is a *teamed
+operation* (relocation, gather, broadcast, reduction — see
+``relocation.py`` / ``teamed.py``).
+
+On a TPU cluster a "place" is a mesh device (or a mesh-axis coordinate)
+and the handle's chunks are that device's shard.  This module keeps the
+handles host-side (numpy) so the distribution logic is runnable and
+testable anywhere; ``to_device``/``from_device`` bridge a collection to
+a sharded ``jax.Array`` for jitted compute, mirroring the paper's
+separation between the collection runtime (Java heap) and the compute
+it feeds.
+
+Lazy handle allocation (paper §5.1) is preserved: handles materialize
+on first touch of a place, not at construction.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Iterable, Sequence
+
+import numpy as np
+
+from .distribution import LongRange, RangeDistribution
+
+__all__ = [
+    "PlaceGroup",
+    "DistArray",
+    "DistBag",
+    "DistMap",
+    "DistIdMap",
+    "DistMultiMap",
+    "CachableArray",
+    "CachableChunkedList",
+]
+
+_GLOBAL_ID_LOCK = threading.Lock()
+_NEXT_GLOBAL_ID = [0]
+
+
+def _fresh_global_id() -> int:
+    with _GLOBAL_ID_LOCK:
+        _NEXT_GLOBAL_ID[0] += 1
+        return _NEXT_GLOBAL_ID[0]
+
+
+class PlaceGroup:
+    """Paper's ``TeamedPlaceGroup``: an ordered set of places.
+
+    Optionally bound to a JAX mesh axis so SPMD teamed operations know
+    which named axis carries the group's collectives (the analogue of
+    the embedded MPI communicator).
+    """
+
+    def __init__(self, n_places: int, *, mesh=None, axis: str | None = None,
+                 members: Sequence[int] | None = None):
+        self.n_places = int(n_places)
+        self.mesh = mesh
+        self.axis = axis
+        self.members = tuple(members) if members is not None else tuple(range(n_places))
+        if len(self.members) != self.n_places:
+            raise ValueError("members length must equal n_places")
+
+    @staticmethod
+    def world(n_places: int, **kw) -> "PlaceGroup":
+        return PlaceGroup(n_places, **kw)
+
+    def subgroup(self, members: Sequence[int]) -> "PlaceGroup":
+        """Paper §3.4: teamed ops over a subset of the world."""
+        return PlaceGroup(len(members), mesh=self.mesh, axis=self.axis,
+                          members=members)
+
+    def size(self) -> int:
+        return self.n_places
+
+    def __contains__(self, place: int) -> bool:
+        return place in self.members
+
+    def __repr__(self) -> str:
+        return f"PlaceGroup({list(self.members)})"
+
+
+class _CommStats:
+    """Communication accounting shared by teamed operations so the
+    benchmarks can report Alltoall/Alltoallv-equivalent volumes."""
+
+    def __init__(self):
+        self.bytes_moved = 0
+        self.messages = 0
+        self.syncs = 0
+
+    def record(self, nbytes: int, messages: int = 1) -> None:
+        self.bytes_moved += int(nbytes)
+        self.messages += int(messages)
+
+    def reset(self) -> None:
+        self.bytes_moved = 0
+        self.messages = 0
+        self.syncs = 0
+
+
+class DistCollection:
+    """Base: global id, place group, lazily-allocated local handles."""
+
+    def __init__(self, group: PlaceGroup):
+        self.group = group
+        self.global_id = _fresh_global_id()
+        self._handles: dict[int, Any] = {}
+        self.comm = _CommStats()
+
+    # -- lazy allocation (paper §5.1) ---------------------------------
+    def _new_handle(self) -> Any:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def handle(self, place: int):
+        """The local handle of ``place``; allocated on first touch."""
+        if place not in self.group:
+            raise KeyError(f"place {place} not in {self.group}")
+        h = self._handles.get(place)
+        if h is None:
+            h = self._new_handle()
+            self._handles[place] = h
+        return h
+
+    def allocated_places(self) -> list[int]:
+        return sorted(self._handles)
+
+
+# ---------------------------------------------------------------------------
+# DistArray : DistChunkedList / DistCol
+# ---------------------------------------------------------------------------
+class _ChunkHandle:
+    """A place's chunks: disjoint ``LongRange`` → ndarray of rows."""
+
+    def __init__(self):
+        self.chunks: dict[LongRange, np.ndarray] = {}
+
+    def ranges(self) -> list[LongRange]:
+        return sorted(self.chunks, key=lambda r: r.start)
+
+    def size(self) -> int:
+        return sum(r.size for r in self.chunks)
+
+    def get(self, idx: int) -> np.ndarray:
+        for r, arr in self.chunks.items():
+            if r.contains(idx):
+                return arr[idx - r.start]
+        raise KeyError(idx)
+
+    def set(self, idx: int, value) -> None:
+        for r, arr in self.chunks.items():
+            if r.contains(idx):
+                arr[idx - r.start] = value
+                return
+        raise KeyError(idx)
+
+    def add_chunk(self, r: LongRange, arr: np.ndarray) -> None:
+        if r.size != len(arr):
+            raise ValueError(f"chunk {r} size != array length {len(arr)}")
+        for existing in self.chunks:
+            if existing.overlaps(r):
+                raise ValueError(f"chunk {r} overlaps existing {existing}")
+        self.chunks[r] = np.asarray(arr)
+
+    def extract(self, r: LongRange) -> np.ndarray:
+        """Remove and return rows covering ``r`` (splits chunks as needed,
+        paper §5.2: 'existing chunks will be split as necessary')."""
+        taken = []
+        for cr in list(self.chunks):
+            inter = cr.intersection(r)
+            if inter is None:
+                continue
+            arr = self.chunks.pop(cr)
+            lo = inter.start - cr.start
+            hi = inter.end - cr.start
+            taken.append((inter.start, arr[lo:hi]))
+            if lo > 0:
+                self.chunks[LongRange(cr.start, inter.start)] = arr[:lo]
+            if hi < cr.size:
+                self.chunks[LongRange(inter.end, cr.end)] = arr[hi:]
+        if not taken:
+            raise KeyError(f"range {r} not held locally")
+        taken.sort()
+        starts = [s for s, _ in taken]
+        covered = sum(len(a) for _, a in taken)
+        if covered != r.size or starts[0] != r.start:
+            raise KeyError(f"range {r} only partially held locally")
+        return np.concatenate([a for _, a in taken], axis=0)
+
+
+class DistArray(DistCollection):
+    """Paper's ``DistChunkedList`` / ``DistCol``: a long-indexed array
+    whose rows live in per-place chunks; with tracked distribution.
+
+    ``track=True`` gives ``DistCol`` semantics (ownership table kept &
+    reconciled through :meth:`update_dist`); ``track=False`` is the
+    plain ``DistChunkedList``.
+    """
+
+    def __init__(self, group: PlaceGroup, *, track: bool = True):
+        super().__init__(group)
+        self.track = track
+        self._dist = RangeDistribution() if track else None
+        self._dist_versions = {p: 0 for p in group.members}
+        self.update_bytes = 0  # delta traffic accounting for updateDist
+
+    def _new_handle(self) -> _ChunkHandle:
+        return _ChunkHandle()
+
+    # -- local access ---------------------------------------------------
+    def add_chunk(self, place: int, r: LongRange, rows) -> None:
+        self.handle(place).add_chunk(r, np.asarray(rows))
+        if self.track:
+            self._dist.assign(r, place)
+
+    def get(self, place: int, idx: int):
+        return self.handle(place).get(idx)
+
+    def set(self, place: int, idx: int, value) -> None:
+        self.handle(place).set(idx, value)
+
+    def ranges(self, place: int) -> list[LongRange]:
+        return self.handle(place).ranges()
+
+    def local_size(self, place: int) -> int:
+        return self.handle(place).size()
+
+    def global_size(self) -> int:
+        return sum(self.handle(p).size() for p in self.group.members)
+
+    # -- parallel patterns (intra-node parallelism, paper §3.5) ---------
+    def for_each(self, place: int, fn: Callable[[int, np.ndarray], None]) -> None:
+        for r in self.ranges(place):
+            arr = self.handle(place).chunks[r]
+            for i in range(r.size):
+                fn(r.start + i, arr[i])
+
+    def map_chunks(self, place: int, fn: Callable[[np.ndarray], np.ndarray]) -> None:
+        """`parallelForEach` analogue: fn is applied per chunk (the
+        vectorized/thread-free TPU equivalent of per-thread scheduling)."""
+        h = self.handle(place)
+        for r in list(h.chunks):
+            h.chunks[r] = np.asarray(fn(h.chunks[r]))
+
+    def to_local_matrix(self, place: int) -> tuple[np.ndarray, np.ndarray]:
+        """Pack the place's rows into one dense (n, ...) matrix + the
+        global indices. Bridge toward a device shard."""
+        h = self.handle(place)
+        rs = h.ranges()
+        if not rs:
+            return np.zeros((0,)), np.zeros((0,), np.int64)
+        rows = np.concatenate([h.chunks[r] for r in rs], axis=0)
+        idx = np.concatenate([np.arange(r.start, r.end) for r in rs])
+        return rows, idx
+
+    # -- relocation registration (paper §5.2, RangeRelocatable) ---------
+    def move_range_at_sync(self, r: LongRange, dest: int, mm) -> None:
+        mm.register_range_move(self, r, dest)
+
+    def move_at_sync_count(self, place: int, count: int, dest: int, mm) -> None:
+        """Bulk relocation: library picks the entries at sync time
+        (paper §5.2) — several count moves from one source compose."""
+        mm.register_array_count_move(self, place, count, dest)
+
+    # -- distribution tracking (paper §4.6) ------------------------------
+    def get_distribution(self) -> RangeDistribution:
+        if not self.track:
+            raise ValueError("distribution tracking disabled for this collection")
+        return self._dist.copy()
+
+    def update_dist(self) -> None:
+        """Teamed reconciliation. Host model: rebuild from handles while
+        accounting the delta bytes that the wire protocol would move
+        (only changes since each place's last sync — paper §4.6)."""
+        if not self.track:
+            raise ValueError("distribution tracking disabled")
+        old = self._dist
+        new = RangeDistribution()
+        for p in self.group.members:
+            for r in self.ranges(p):
+                new.assign(r, p)
+        # Delta accounting: ranges whose ownership changed since `old`.
+        changed = 0
+        for r, o in new.items():
+            try:
+                prev_owner = old.owner_of(r.start)
+            except KeyError:
+                prev_owner = -2
+            if prev_owner != o:
+                changed += 1
+        self.update_bytes += 8 * 3 * changed * self.group.size()
+        self.comm.record(8 * 3 * changed * self.group.size(),
+                         messages=self.group.size())
+        self._dist = new
+
+    # -- relocation execution hooks (called by CollectiveMoveManager) ----
+    def _extract_range(self, r: LongRange, src: int) -> np.ndarray:
+        return self.handle(src).extract(r)
+
+    def _insert_payload(self, dest: int, payload) -> None:
+        r, rows = payload
+        self.handle(dest).add_chunk(r, rows)
+
+    def _payload_nbytes(self, payload) -> int:
+        _, rows = payload
+        return int(np.asarray(rows).nbytes) + 16
+
+
+class DistBag(DistCollection):
+    """Paper's ``DistBag``: unordered multiset, efficient concurrent
+    producers; entries have no identity so only bulk relocation exists."""
+
+    def __init__(self, group: PlaceGroup):
+        super().__init__(group)
+
+    def _new_handle(self) -> list:
+        return []
+
+    def put(self, place: int, item) -> None:
+        self.handle(place).append(np.asarray(item))
+
+    def put_batch(self, place: int, items) -> None:
+        self.handle(place).extend(np.asarray(x) for x in items)
+
+    def local_size(self, place: int) -> int:
+        return len(self.handle(place))
+
+    def global_size(self) -> int:
+        return sum(len(self.handle(p)) for p in self.group.members)
+
+    def items(self, place: int) -> list[np.ndarray]:
+        return list(self.handle(place))
+
+    def clear(self, place: int) -> None:
+        self.handle(place).clear()
+
+    def move_at_sync_count(self, place: int, count: int, dest: int, mm) -> None:
+        mm.register_bag_move(self, place, count, dest)
+
+    # producer/receiver (paper §4.2 parallelToBag): apply fn to each row
+    # of `source` at `place`, collecting non-None results into this bag.
+    def collect_from(self, place: int, source: DistArray,
+                     fn: Callable[[int, np.ndarray], Any]) -> None:
+        out = self.handle(place)
+        src = source.handle(place)
+        for r in src.ranges():
+            arr = src.chunks[r]
+            for i in range(r.size):
+                produced = fn(r.start + i, arr[i])
+                if produced is not None:
+                    out.append(np.asarray(produced))
+
+    # teamed gather (paper §4.3): all entries relocate to `root`.
+    def team_gather(self, root: int) -> None:
+        self.comm.syncs += 1
+        moved = 0
+        for p in self.group.members:
+            if p == root:
+                continue
+            h = self.handle(p)
+            for item in h:
+                self.handle(root).append(item)
+                moved += int(np.asarray(item).nbytes)
+            h.clear()
+        self.comm.record(moved, messages=self.group.size() - 1)
+
+    def _extract_count(self, place: int, count: int):
+        h = self.handle(place)
+        if len(h) < count:
+            raise ValueError(f"bag at place {place} holds {len(h)} < {count}")
+        taken = h[-count:]
+        del h[-count:]
+        return taken
+
+    def _insert_payload(self, dest: int, payload) -> None:
+        self.handle(dest).extend(payload)
+
+    def _payload_nbytes(self, payload) -> int:
+        return int(sum(np.asarray(x).nbytes for x in payload)) + 16
+
+
+class DistMap(DistCollection):
+    """Paper's ``DistMap<K,V>`` (and via ``multi=True`` ``DistMultiMap``)."""
+
+    def __init__(self, group: PlaceGroup, *, multi: bool = False):
+        super().__init__(group)
+        self.multi = multi
+
+    def _new_handle(self) -> dict:
+        return {}
+
+    def put(self, place: int, key, value) -> None:
+        h = self.handle(place)
+        if self.multi:
+            h.setdefault(key, []).append(value)
+        else:
+            h[key] = value
+
+    def get(self, place: int, key):
+        return self.handle(place)[key]
+
+    def keys(self, place: int):
+        return list(self.handle(place).keys())
+
+    def local_size(self, place: int) -> int:
+        return len(self.handle(place))
+
+    def global_size(self) -> int:
+        return sum(len(self.handle(p)) for p in self.group.members)
+
+    def for_each(self, place: int, fn: Callable[[Any, Any], None]) -> None:
+        for k, v in list(self.handle(place).items()):
+            fn(k, v)
+
+    # KeyRelocatable (paper §5.2): relocate by key→destination rule.
+    def move_at_sync(self, place: int, rule: Callable[[Any], int], mm) -> None:
+        mm.register_key_moves(self, place, rule)
+
+    def relocate(self, dist: RangeDistribution, mm=None) -> None:
+        """Paper §4.4: relocate entries to match a (long-key) distribution
+        — the contracted-orders dispatch. Teamed: applies to all places."""
+        from .relocation import CollectiveMoveManager
+        own_mm = mm is None
+        if own_mm:
+            mm = CollectiveMoveManager(self.group)
+        for p in self.group.members:
+            self.move_at_sync(p, lambda k: dist.owner_of(int(k)), mm)
+        if own_mm:
+            mm.sync()
+
+    def _extract_keys(self, place: int, keys):
+        h = self.handle(place)
+        return [(k, h.pop(k)) for k in keys]
+
+    def _insert_payload(self, dest: int, payload) -> None:
+        h = self.handle(dest)
+        for k, v in payload:
+            if self.multi and isinstance(v, list):
+                h.setdefault(k, []).extend(v)
+            else:
+                h[k] = v
+
+    def _payload_nbytes(self, payload) -> int:
+        total = 16
+        for k, v in payload:
+            vv = v if isinstance(v, list) else [v]
+            total += 8 + sum(int(np.asarray(x).nbytes) for x in vv)
+        return total
+
+
+class DistIdMap(DistMap):
+    """Paper's ``DistIdMap``: long keys, tracked distribution."""
+
+    def __init__(self, group: PlaceGroup):
+        super().__init__(group, multi=False)
+        self._dist = RangeDistribution()
+
+    def put(self, place: int, key: int, value) -> None:
+        super().put(place, int(key), value)
+        self._dist.assign(LongRange(int(key), int(key) + 1), place)
+
+    def get_distribution(self) -> RangeDistribution:
+        return self._dist.copy()
+
+    def update_dist(self) -> None:
+        new = RangeDistribution()
+        for p in self.group.members:
+            for k in self.keys(p):
+                new.assign(LongRange(k, k + 1), p)
+        self._dist = new
+
+
+def DistMultiMap(group: PlaceGroup) -> DistMap:
+    """Paper's ``DistMultiMap``: multiple values per key."""
+    return DistMap(group, multi=True)
+
+
+# ---------------------------------------------------------------------------
+# Replication: CachableArray / CachableChunkedList
+# ---------------------------------------------------------------------------
+class CachableArray(DistCollection):
+    """Paper §4.1: owner-updated array replicated on every place.
+
+    ``broadcast(pack, unpack)`` extracts an update object from the
+    owner's entries and applies it to every replica — on TPU this is the
+    replicated-parameter / serving-weights refresh (a ``broadcast``
+    collective from the owner's shard).
+    """
+
+    def __init__(self, group: PlaceGroup, values, *, owner: int = 0):
+        super().__init__(group)
+        self.owner = owner
+        self._template = [v for v in values]
+        for p in group.members:
+            self._handles[p] = [np.copy(np.asarray(v)) for v in values]
+
+    def _new_handle(self):
+        return [np.copy(np.asarray(v)) for v in self._template]
+
+    def local(self, place: int) -> list[np.ndarray]:
+        return self.handle(place)
+
+    def broadcast(self, pack: Callable[[Any], Any],
+                  unpack: Callable[[Any, Any], Any]) -> None:
+        self.comm.syncs += 1
+        src = self.handle(self.owner)
+        updates = [pack(v) for v in src]
+        nbytes = sum(int(np.asarray(u).nbytes) for u in updates)
+        self.comm.record(nbytes * (self.group.size() - 1),
+                         messages=self.group.size() - 1)
+        for p in self.group.members:
+            h = self.handle(p)
+            for i, u in enumerate(updates):
+                res = unpack(h[i], u)
+                if res is not None:
+                    h[i] = np.asarray(res)
+
+
+class CachableChunkedList(DistArray):
+    """Paper §4.9/§4.12: chunked list whose ranges can be *shared*
+    (replicated) on all places, with a primitive-typed ``allreduce`` to
+    reconcile per-replica contributions (MolDyn force sum — i.e. the
+    data-parallel gradient allreduce pattern).
+    """
+
+    def __init__(self, group: PlaceGroup):
+        super().__init__(group, track=True)
+        self.shared_ranges: list[LongRange] = []
+
+    def share(self, place: int, r: LongRange | None = None) -> None:
+        """Teamed: the places owning ``r`` replicate it everywhere; places
+        calling with ``r=None`` only receive (paper Listing 9)."""
+        if r is None:
+            return
+        rows = self.handle(place).chunks.get(r)
+        if rows is None:
+            rows = self.handle(place).extract(r)
+            self.handle(place).add_chunk(r, rows)
+        self.comm.syncs += 1
+        self.comm.record(int(rows.nbytes) * (self.group.size() - 1),
+                         messages=self.group.size() - 1)
+        for p in self.group.members:
+            if p == place:
+                continue
+            self.handle(p).add_chunk(r, np.copy(rows))
+        self.shared_ranges.append(r)
+
+    def allreduce(self, pack: Callable[[np.ndarray], np.ndarray],
+                  unpack: Callable[[np.ndarray, np.ndarray], np.ndarray],
+                  op: str = "sum") -> None:
+        """Elementwise allreduce over the replicated ranges. ``pack`` maps
+        rows → a float lane matrix; ``unpack`` writes reduced lanes back.
+        Mirrors Listing 11 (write/read Double + MPI.SUM)."""
+        self.comm.syncs += 1
+        reducers = {"sum": np.add.reduce, "max": np.maximum.reduce,
+                    "min": np.minimum.reduce}
+        red = reducers[op]
+        for r in self.shared_ranges:
+            lanes = [np.asarray(pack(self.handle(p).chunks[r]))
+                     for p in self.group.members]
+            reduced = red(np.stack(lanes, 0), axis=0)
+            self.comm.record(lanes[0].nbytes * self.group.size(),
+                             messages=self.group.size())
+            for p in self.group.members:
+                out = unpack(self.handle(p).chunks[r], reduced)
+                if out is not None:
+                    self.handle(p).chunks[r] = np.asarray(out)

@@ -1,0 +1,122 @@
+"""RangedListProduct (paper §4.10) — pairwise-interaction scheduling.
+
+``newProductTriangle(list, list)`` represents the upper triangle of the
+pair product of a range with itself; ``teamedSplit(N, N, group, seed)``
+tiles it N×N and deterministically assigns tiles to places so that every
+tile is processed by exactly one place (no communication — 'teamed'
+because all places must call it with identical arguments).
+
+TPU mapping: the upper-triangle tile schedule **is** causal
+block-sparsity.  The flash-attention kernel in ``kernels/`` consumes
+exactly this schedule (only tiles with ``k_start <= q_end`` are
+visited), and the N-body example consumes it for force tiles — the same
+object serves both, which is the point of the abstraction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .distribution import LongRange
+
+__all__ = ["Tile", "RangedListProduct"]
+
+
+@dataclass(frozen=True)
+class Tile:
+    rows: LongRange
+    cols: LongRange
+    diagonal: bool  # tile straddles the diagonal → needs masking
+
+    @property
+    def pairs(self) -> int:
+        if not self.diagonal:
+            return self.rows.size * self.cols.size
+        # strictly-upper-triangle pair count within tile (no self pairs)
+        n = 0
+        for i in self.rows:
+            n += max(0, self.cols.end - max(i + 1, self.cols.start))
+        return n
+
+
+class RangedListProduct:
+    """Upper-triangle product of ``[0, n)`` with itself, tiled."""
+
+    def __init__(self, n: int, tiles: list[Tile] | None = None):
+        self.n = n
+        self.tiles = tiles if tiles is not None else [
+            Tile(LongRange(0, n), LongRange(0, n), diagonal=True)]
+
+    @staticmethod
+    def new_product_triangle(n: int) -> "RangedListProduct":
+        return RangedListProduct(n)
+
+    def split(self, n_div_rows: int, n_div_cols: int) -> "RangedListProduct":
+        """Tile the triangle; only tiles intersecting the upper triangle
+        (col_end > row_start) are kept."""
+        rows = LongRange(0, self.n).split(n_div_rows)
+        cols = LongRange(0, self.n).split(n_div_cols)
+        tiles = []
+        for r in rows:
+            if r.size == 0:
+                continue
+            for c in cols:
+                if c.size == 0 or c.end <= r.start + 1:
+                    continue  # strictly below the diagonal: no pairs
+                diagonal = c.start < r.end  # straddles i<j boundary
+                t = Tile(r, c, diagonal)
+                if t.pairs > 0:
+                    tiles.append(t)
+        return RangedListProduct(self.n, tiles)
+
+    def teamed_split(self, n_div_rows: int, n_div_cols: int,
+                     n_places: int, seed: int) -> list["RangedListProduct"]:
+        """Paper's ``teamedSplit``: split into tiles and deterministically
+        assign each tile to exactly one place (seeded shuffle + round
+        robin, balancing by pair count).  Every place must compute this
+        with identical arguments — the returned list is indexed by place.
+        """
+        prod = self.split(n_div_rows, n_div_cols)
+        order = sorted(range(len(prod.tiles)),
+                       key=lambda i: -prod.tiles[i].pairs)
+        rng = np.random.default_rng(seed)
+        # seeded tie-shuffle then greedy least-loaded assignment
+        perm = list(order)
+        rng.shuffle(perm[: max(0, len(perm) // 4)])
+        loads = np.zeros(n_places, np.int64)
+        assignment: list[list[Tile]] = [[] for _ in range(n_places)]
+        for i in perm:
+            p = int(np.argmin(loads))
+            assignment[p].append(prod.tiles[i])
+            loads[p] += prod.tiles[i].pairs
+        return [RangedListProduct(self.n, a) for a in assignment]
+
+    # ------------------------------------------------------------------
+    def total_pairs(self) -> int:
+        return sum(t.pairs for t in self.tiles)
+
+    def for_each_pair(self, fn) -> None:
+        """Reference iteration (oracle for tests): fn(i, j) for each
+        upper-triangle pair covered by this product's tiles."""
+        for t in self.tiles:
+            for i in t.rows:
+                j0 = max(t.cols.start, i) if t.diagonal else t.cols.start
+                for j in range(j0, t.cols.end):
+                    if j <= i:
+                        continue
+                    fn(i, j)
+
+    def causal_block_mask(self, n_div_rows: int, n_div_cols: int) -> np.ndarray:
+        """Block-level visit mask for attention-style consumers: entry
+        [qi, kj] True iff that tile holds any pair (k <= q causal form
+        uses the transpose).  Shared by kernels/flash_attention."""
+        rows = LongRange(0, self.n).split(n_div_rows)
+        cols = LongRange(0, self.n).split(n_div_cols)
+        mask = np.zeros((len(rows), len(cols)), bool)
+        for t in self.tiles:
+            for ri, r in enumerate(rows):
+                for ci, c in enumerate(cols):
+                    if r == t.rows and c == t.cols:
+                        mask[ri, ci] = True
+        return mask

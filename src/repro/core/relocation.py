@@ -1,0 +1,304 @@
+"""Entry relocation — the paper's core mechanism (§3.4, §5.2, §5.3).
+
+Two halves, mirroring the paper's design:
+
+* **Host half** — :class:`CollectiveMoveManager`: entries of any number
+  of collections are *registered* for relocation (by range, by count,
+  or by key→destination rule) and transferred when every participating
+  place calls :meth:`CollectiveMoveManager.sync`.  The wire protocol is
+  the paper's §5.3 two-phase exchange — Alltoall on byte counts, then
+  Alltoallv on payload — which we account explicitly so benchmarks can
+  report the communication volume.
+
+* **SPMD half** — :func:`spmd_relocate` / :func:`spmd_relocate_back`:
+  the same operation *inside* a jitted/shard_mapped program.  TPU
+  collectives are dense and shape-static, so raggedness becomes
+  *capacity + validity mask*: each shard packs its outgoing rows into a
+  ``(n_shards, capacity, ...)`` buffer, a single ``lax.all_to_all``
+  plays the role of Alltoallv, and masks carry the true counts.  This
+  is exactly the MoE token-dispatch idiom — which is why the MoE layer
+  in ``models/moe.py`` is built directly on these functions.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .collections import DistArray, DistBag, DistMap, PlaceGroup
+from .distribution import LongRange
+
+__all__ = [
+    "CollectiveMoveManager",
+    "spmd_relocate",
+    "spmd_relocate_back",
+    "spmd_counts",
+]
+
+
+# ---------------------------------------------------------------------------
+# Host half
+# ---------------------------------------------------------------------------
+@dataclass
+class _RangeMove:
+    collection: DistArray
+    r: LongRange
+    dest: int
+
+
+@dataclass
+class _BagMove:
+    collection: DistBag
+    src: int
+    count: int
+    dest: int
+
+
+@dataclass
+class _ArrayCountMove:
+    collection: DistArray
+    src: int
+    count: int
+    dest: int
+
+
+@dataclass
+class _KeyMove:
+    collection: DistMap
+    src: int
+    rule: Callable[[Any], int]
+
+
+class CollectiveMoveManager:
+    """Paper's ``CollectiveMoveManager``.
+
+    Registration methods queue moves; ``sync()`` is the teamed barrier
+    that executes them.  Multiple collections may participate in one
+    sync (paper Listing 12), and the destination of an entry is free —
+    any place of the group.
+    """
+
+    def __init__(self, group: PlaceGroup):
+        self.group = group
+        self._range_moves: list[_RangeMove] = []
+        self._bag_moves: list[_BagMove] = []
+        self._key_moves: list[_KeyMove] = []
+        self._array_count_moves: list[_ArrayCountMove] = []
+        self.last_counts_matrix: np.ndarray | None = None
+        self.last_payload_bytes = 0
+        self.syncs = 0
+
+    # -- registration ----------------------------------------------------
+    def register_range_move(self, col: DistArray, r: LongRange, dest: int) -> None:
+        if dest not in self.group:
+            raise KeyError(f"destination {dest} not in group")
+        self._range_moves.append(_RangeMove(col, r, dest))
+
+    def register_bag_move(self, col: DistBag, src: int, count: int, dest: int) -> None:
+        if dest not in self.group:
+            raise KeyError(f"destination {dest} not in group")
+        self._bag_moves.append(_BagMove(col, src, count, dest))
+
+    def register_array_count_move(self, col: DistArray, src: int, count: int,
+                                  dest: int) -> None:
+        """Bulk relocation resolved lazily at sync (so several count-based
+        moves from one source compose — the library picks the entries)."""
+        if dest not in self.group:
+            raise KeyError(f"destination {dest} not in group")
+        self._array_count_moves.append(_ArrayCountMove(col, src, count, dest))
+
+    def register_key_moves(self, col: DistMap, src: int,
+                           rule: Callable[[Any], int]) -> None:
+        self._key_moves.append(_KeyMove(col, src, rule))
+
+    def pending(self) -> int:
+        return (len(self._range_moves) + len(self._bag_moves)
+                + len(self._key_moves) + len(self._array_count_moves))
+
+    # -- the teamed sync ---------------------------------------------------
+    def sync(self) -> None:
+        """Execute all registered moves.
+
+        Phase 1 (Alltoall): build the place×place byte-count matrix.
+        Phase 2 (Alltoallv): move the payloads and insert at destination.
+        """
+        n = self.group.size()
+        place_index = {p: i for i, p in enumerate(self.group.members)}
+        counts = np.zeros((n, n), dtype=np.int64)
+        payloads: list[tuple[Any, int, int, Any]] = []  # (col, src, dest, payload)
+
+        # Range moves: find the current holder, extract (splitting chunks).
+        for m in self._range_moves:
+            src = None
+            for p in self.group.members:
+                held = any(cr.overlaps(m.r) for cr in m.collection.ranges(p))
+                if held:
+                    src = p
+                    break
+            if src is None:
+                raise KeyError(f"range {m.r} not held by any place in group")
+            rows = m.collection._extract_range(m.r, src)
+            payload = (m.r, rows)
+            nb = m.collection._payload_nbytes(payload)
+            counts[place_index[src], place_index[m.dest]] += nb
+            payloads.append((m.collection, src, m.dest, payload))
+
+        for m in self._array_count_moves:
+            remaining = m.count
+            for r in list(m.collection.ranges(m.src)):
+                if remaining <= 0:
+                    break
+                take = min(remaining, r.size)
+                rr = LongRange(r.start, r.start + take)
+                rows = m.collection._extract_range(rr, m.src)
+                payload = (rr, rows)
+                nb = m.collection._payload_nbytes(payload)
+                counts[place_index[m.src], place_index[m.dest]] += nb
+                payloads.append((m.collection, m.src, m.dest, payload))
+                remaining -= take
+            if remaining > 0:
+                raise ValueError(
+                    f"place {m.src} holds fewer than {m.count} entries")
+
+        for m in self._bag_moves:
+            payload = m.collection._extract_count(m.src, m.count)
+            nb = m.collection._payload_nbytes(payload)
+            counts[place_index[m.src], place_index[m.dest]] += nb
+            payloads.append((m.collection, m.src, m.dest, payload))
+
+        for m in self._key_moves:
+            by_dest: dict[int, list] = {}
+            for k in m.collection.keys(m.src):
+                d = m.rule(k)
+                if d not in self.group:
+                    raise KeyError(f"rule sent key {k!r} to non-member {d}")
+                if d != m.src:
+                    by_dest.setdefault(d, []).append(k)
+            for d, keys in by_dest.items():
+                payload = m.collection._extract_keys(m.src, keys)
+                nb = m.collection._payload_nbytes(payload)
+                counts[place_index[m.src], place_index[d]] += nb
+                payloads.append((m.collection, m.src, d, payload))
+
+        # Phase 2: deliver. (Host model: direct insertion; on device the
+        # equivalent is spmd_relocate below.)
+        moved_bytes = 0
+        for col, src, dest, payload in payloads:
+            if src != dest:
+                moved_bytes += col._payload_nbytes(payload)
+            col._insert_payload(dest, payload)
+            col.comm.record(col._payload_nbytes(payload) if src != dest else 0)
+
+        self.last_counts_matrix = counts
+        self.last_payload_bytes = moved_bytes
+        self.syncs += 1
+        self._range_moves.clear()
+        self._bag_moves.clear()
+        self._key_moves.clear()
+        self._array_count_moves.clear()
+
+
+# ---------------------------------------------------------------------------
+# SPMD half — relocation inside jit/shard_map
+# ---------------------------------------------------------------------------
+def spmd_counts(dest: jnp.ndarray, n_shards: int) -> jnp.ndarray:
+    """Per-destination row counts (phase-1 Alltoall payload)."""
+    return jnp.sum(jax.nn.one_hot(dest, n_shards, dtype=jnp.int32), axis=0)
+
+
+def _pack_by_dest(x: jnp.ndarray, dest: jnp.ndarray, n_shards: int,
+                  capacity: int):
+    """Pack local rows into a (n_shards, capacity, ...) send buffer.
+
+    Returns (buffer, valid, slot) where ``slot[i]`` is the flat position
+    row i was packed into (or -1 if dropped by capacity overflow) — kept
+    so the inverse routing (combine / 'accept') can restore order.
+    """
+    n = x.shape[0]
+    # stable rank of each row within its destination group
+    sort_idx = jnp.argsort(dest, stable=True)          # rows grouped by dest
+    sorted_dest = dest[sort_idx]
+    # position within group: arange minus start offset of the group
+    counts = spmd_counts(dest, n_shards)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - offsets[sorted_dest]
+    rank = jnp.zeros((n,), jnp.int32).at[sort_idx].set(pos_sorted)
+    keep = rank < capacity
+    slot = jnp.where(keep, dest * capacity + rank, n_shards * capacity)
+    flat_shape = (n_shards * capacity + 1,) + x.shape[1:]
+    buf = jnp.zeros(flat_shape, x.dtype).at[slot].set(x, mode="drop")
+    valid = jnp.zeros((n_shards * capacity + 1,), jnp.bool_).at[slot].set(
+        keep, mode="drop")
+    buf = buf[:-1].reshape((n_shards, capacity) + x.shape[1:])
+    valid = valid[:-1].reshape(n_shards, capacity)
+    slot = jnp.where(keep, slot, -1)
+    return buf, valid, slot
+
+
+def spmd_relocate(x: jnp.ndarray, dest: jnp.ndarray, *, axis_name: str,
+                  capacity: int, extras: tuple = ()):  # noqa: D401
+    """Teamed relocation of rows inside shard_map (the device-side
+    ``CollectiveMoveManager.sync``).
+
+    Args:
+      x: (n, ...) local rows.
+      dest: (n,) destination shard index along ``axis_name``.
+      capacity: max rows any shard pair exchanges (MPI buffer sizing made
+        explicit; overflow rows are dropped and flagged).
+      extras: additional (n, ...) arrays relocated with the same routing
+        (e.g. router weights, source metadata).
+
+    Returns dict with:
+      recv: (n_shards*capacity, ...) received rows (zeros where invalid)
+      recv_valid: mask of real rows
+      recv_src: source shard of each received row
+      slot: (n,) flat slot each local row was packed into (-1 = dropped)
+      recv_extras: relocated extras
+    """
+    n_shards = jax.lax.axis_size(axis_name)
+    buf, valid, slot = _pack_by_dest(x, dest, n_shards, capacity)
+    recv = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=False)
+    recv_valid = jax.lax.all_to_all(valid.astype(jnp.int8), axis_name, 0, 0,
+                                    tiled=False).astype(bool)
+    recv_extras = []
+    for e in extras:
+        ebuf = jnp.zeros((n_shards * capacity + 1,) + e.shape[1:], e.dtype)
+        ebuf = ebuf.at[jnp.where(slot >= 0, slot, n_shards * capacity)].set(
+            e, mode="drop")
+        ebuf = ebuf[:-1].reshape((n_shards, capacity) + e.shape[1:])
+        recv_extras.append(
+            jax.lax.all_to_all(ebuf, axis_name, 0, 0, tiled=False).reshape(
+                (n_shards * capacity,) + e.shape[1:]))
+    src = jnp.broadcast_to(jnp.arange(n_shards, dtype=jnp.int32)[:, None],
+                           (n_shards, capacity))
+    flat = (n_shards * capacity,)
+    return {
+        "recv": recv.reshape(flat + x.shape[1:]),
+        "recv_valid": recv_valid.reshape(flat),
+        "recv_src": src.reshape(flat),
+        "slot": slot,
+        "recv_extras": tuple(recv_extras),
+    }
+
+
+def spmd_relocate_back(y: jnp.ndarray, slot: jnp.ndarray, *, axis_name: str,
+                       capacity: int, fill=0.0) -> jnp.ndarray:
+    """Inverse relocation: route processed rows back to their source
+    shard and original order (the 'accept' phase of an accumulator, or
+    the MoE combine).  ``y`` is (n_shards*capacity, ...) in the same
+    layout produced by :func:`spmd_relocate`; ``slot`` is the slot map
+    returned by it."""
+    n_shards = jax.lax.axis_size(axis_name)
+    buf = y.reshape((n_shards, capacity) + y.shape[1:])
+    back = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=False)
+    flat = back.reshape((n_shards * capacity,) + y.shape[1:])
+    n = slot.shape[0]
+    safe = jnp.where(slot >= 0, slot, 0)
+    out = flat[safe]
+    mask_shape = (n,) + (1,) * (out.ndim - 1)
+    return jnp.where((slot >= 0).reshape(mask_shape), out, fill)

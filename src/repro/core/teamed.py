@@ -1,0 +1,137 @@
+"""Teamed operations (paper §3.4, §4.7, §4.8).
+
+A *teamed operation* involves one activity per place of a group and acts
+as both communication and synchronization.  Device-side, a team is a
+named mesh axis and teamed ops lower to XLA collectives (overlappable by
+the scheduler); host-side (for the collection runtime and simulators)
+they operate across local handles directly, with byte accounting.
+
+The ``Reducer`` protocol is the paper's §4.7 contract: ``new_reducer``
+(fresh identity), ``reduce`` (fold one/multiple entries in), ``merge``
+(associative combine of two reducers).  Teamed reduction = local fold on
+each handle, then an allreduce-style merge (§4.8) — device-side we use
+``all_gather`` + fold for arbitrary monoids, with a ``psum`` fast path
+for additive reducers.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .collections import DistArray, PlaceGroup
+
+__all__ = [
+    "Reducer",
+    "local_reduce",
+    "team_reduce",
+    "spmd_team_reduce",
+    "allgather1",
+    "spmd_allgather1",
+    "broadcast_from",
+]
+
+
+class Reducer(Protocol):
+    """User-defined reduction (paper §4.7)."""
+
+    def new_reducer(self) -> Any:  # identity state (a pytree)
+        ...
+
+    def reduce(self, state: Any, rows: np.ndarray) -> Any:  # fold entries in
+        ...
+
+    def merge(self, a: Any, b: Any) -> Any:  # associative+commutative
+        ...
+
+    # additive reducers may set this True to enable the psum fast path
+    additive: bool = False
+
+
+def local_reduce(col: DistArray, place: int, reducer: Reducer) -> Any:
+    """Parallel local reduction (paper §4.7).
+
+    The paper hands each thread a private reducer instance and merges at
+    the end; the vectorized equivalent folds each chunk independently
+    (chunks are the parallel grains) and merges — same associativity
+    contract, deterministic merge order."""
+    states = []
+    h = col.handle(place)
+    for r in h.ranges():
+        states.append(reducer.reduce(reducer.new_reducer(), h.chunks[r]))
+    if not states:
+        return reducer.new_reducer()
+    acc = states[0]
+    for s in states[1:]:
+        acc = reducer.merge(acc, s)
+    return acc
+
+
+def team_reduce(col: DistArray, reducer: Reducer) -> Any:
+    """Teamed reduction (paper §4.8): local reduce per handle, then a
+    global merge.  Every place receives the same result (allreduce
+    semantics).  Host model merges in place order — associativity makes
+    the result identical to any tree order."""
+    group = col.group
+    locals_ = [local_reduce(col, p, reducer) for p in group.members]
+    acc = locals_[0]
+    for s in locals_[1:]:
+        acc = reducer.merge(acc, s)
+    payload = sum(int(np.asarray(leaf).nbytes)
+                  for st in locals_
+                  for leaf in jax.tree_util.tree_leaves(st))
+    col.comm.record(payload, messages=group.size())
+    col.comm.syncs += 1
+    return acc
+
+
+def spmd_team_reduce(local_state: Any, reducer: Reducer, axis_name: str) -> Any:
+    """Device-side teamed reduction inside shard_map.
+
+    ``local_state`` is the already-folded local reducer state.  Additive
+    reducers use ``psum`` (single fused allreduce); general monoids use
+    ``all_gather`` + an unrolled merge tree.
+    """
+    if getattr(reducer, "additive", False):
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.psum(x, axis_name), local_state)
+    n = jax.lax.axis_size(axis_name)
+    gathered = jax.tree_util.tree_map(
+        lambda x: jax.lax.all_gather(x, axis_name, axis=0), local_state)
+
+    def pick(i):
+        return jax.tree_util.tree_map(lambda g: g[i], gathered)
+
+    acc = pick(0)
+    for i in range(1, n):
+        acc = reducer.merge(acc, pick(i))
+    # every shard computed the identical merge; re-establish replication
+    # for shard_map's static checker via a one-hot psum
+    idx = jax.lax.axis_index(axis_name)
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.psum(jnp.where(idx == 0, a, jnp.zeros_like(a)),
+                               axis_name), acc)
+
+
+def allgather1(group: PlaceGroup, values: Sequence[float]) -> np.ndarray:
+    """Paper §4.5's ``allGather1``: every place contributes one scalar and
+    receives the full vector (the load-balancer's cost exchange)."""
+    if len(values) != group.size():
+        raise ValueError("one value per place required")
+    return np.asarray(list(values), dtype=np.float64)
+
+
+def spmd_allgather1(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Device-side allgather of one scalar per shard."""
+    return jax.lax.all_gather(x, axis_name)
+
+
+def broadcast_from(group: PlaceGroup, owner: int, value: np.ndarray,
+                   sinks: dict[int, Callable[[np.ndarray], None]]) -> None:
+    """One-producer broadcast (CachableArray.broadcast's transport)."""
+    for p in group.members:
+        if p == owner:
+            continue
+        sinks[p](np.copy(value))

@@ -1,0 +1,1 @@
+from .pipeline import *  # noqa: F401,F403

@@ -1,0 +1,105 @@
+"""Deterministic synthetic token pipeline backed by a DistArray.
+
+The batch rows of the training stream are entries of a tracked
+``DistArray`` (paper: agents of PlhamJ): the runtime's straggler
+balancer relocates row ranges between data shards and ``update_dist``
+keeps the ownership table consistent — the training loop just reads
+whatever its local handle holds.
+
+The synthetic stream is a seeded Zipf-ish token process (deterministic
+per (seed, epoch, row)), so every test/benchmark is reproducible with no
+dataset download; a real deployment swaps ``TokenSource``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from ..core import DistArray, LongRange, PlaceGroup, RangeDistribution
+
+__all__ = ["TokenSource", "ShardedBatches", "make_global_batch"]
+
+
+@dataclass
+class TokenSource:
+    vocab_size: int
+    seq_len: int
+    seed: int = 0
+
+    def row(self, epoch: int, idx: int) -> np.ndarray:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, epoch, idx]))
+        # Zipf-flavored marginal over the vocab, mixed with short repeats
+        z = rng.zipf(1.3, size=self.seq_len).astype(np.int64)
+        tok = (z + rng.integers(0, 97, self.seq_len)) % self.vocab_size
+        rep = rng.integers(0, self.seq_len, self.seq_len // 8)
+        tok[rep] = tok[(rep - 3) % self.seq_len]
+        return tok.astype(np.int32)
+
+
+def make_global_batch(src: TokenSource, epoch: int, start_row: int,
+                      batch: int):
+    rows = np.stack([src.row(epoch, start_row + i) for i in range(batch)])
+    labels = np.concatenate([rows[:, 1:], rows[:, :1]], axis=1)
+    return {"tokens": rows, "labels": labels}
+
+
+class ShardedBatches:
+    """Per-place batch-row assignment as a relocatable collection.
+
+    Each data shard owns a range of the global batch's row indices; the
+    balancer can relocate ranges (straggler mitigation), after which
+    ``local_rows(place)`` reflects the new ownership.
+    """
+
+    def __init__(self, group: PlaceGroup, global_batch: int, src: TokenSource):
+        self.group = group
+        self.global_batch = global_batch
+        self.src = src
+        self.assign = DistArray(group, track=True)
+        for p, r in enumerate(LongRange(0, global_batch).split(group.size())):
+            if r.size:
+                # entries are just the row ids (relocatable payload)
+                self.assign.add_chunk(p, r,
+                                      np.arange(r.start, r.end)[:, None])
+        self.epoch = 0
+        self.cursor = 0
+
+    def distribution(self) -> RangeDistribution:
+        return self.assign.get_distribution()
+
+    def loads(self) -> np.ndarray:
+        return self.distribution().loads(self.group.size())
+
+    def local_batch(self, place: int) -> dict:
+        rows, idx = self.assign.to_local_matrix(place)
+        row_ids = rows[:, 0].astype(int) if len(rows) else []
+        toks = np.stack([self.src.row(self.epoch, self.cursor + int(i))
+                         for i in row_ids]) if len(row_ids) else \
+            np.zeros((0, self.src.seq_len), np.int32)
+        labels = (np.concatenate([toks[:, 1:], toks[:, :1]], axis=1)
+                  if len(row_ids) else toks)
+        return {"tokens": toks, "labels": labels, "rows": np.asarray(row_ids)}
+
+    def advance(self) -> None:
+        self.cursor += self.global_batch
+        if self.cursor >= 10_000_000:
+            self.cursor = 0
+            self.epoch += 1
+
+    def apply_balance(self, decision, mm=None) -> None:
+        """Relocate batch rows per a BalanceDecision + update_dist."""
+        from ..core import CollectiveMoveManager
+        own = mm is None
+        if own:
+            mm = CollectiveMoveManager(self.group)
+        for src_p, dest_p, count in decision.moves:
+            avail = self.assign.local_size(src_p)
+            n = min(count, max(avail - 1, 0))
+            if n > 0:
+                self.assign.move_at_sync_count(src_p, n, dest_p, mm)
+        if own:
+            mm.sync()
+            self.assign.update_dist()

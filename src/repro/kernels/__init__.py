@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Kernels (each with a pure-jnp oracle in ref.py, dispatched via ops.py):
+
+* flash_attention — RangedListProduct/Accumulator on the MXU (causal /
+  sliding-window / softcap / GQA tiled attention).
+* moe_dispatch — gather_rows + moe_combine, the relocation engine's
+  on-chip pack/accept with scalar-prefetch-driven DMA.
+* rg_lru — blocked linear recurrence (RecurrentGemma).
+* mlstm — chunkwise stabilized matrix-memory recurrence (xLSTM).
+"""
+from . import ops, ref
+from .flash_attention import flash_attention
+from .mlstm import mlstm_chunkwise
+from .moe_dispatch import gather_rows, moe_combine
+from .rg_lru import rg_lru
+
+__all__ = ["ops", "ref", "flash_attention", "mlstm_chunkwise",
+           "gather_rows", "moe_combine", "rg_lru"]

@@ -1,0 +1,177 @@
+"""Flash attention Pallas TPU kernel.
+
+This is the TPU-native realization of the paper's ``RangedListProduct``
++ ``Accumulator`` pattern (§4.10–4.11): the (q, k) score matrix is the
+pair product, visited as an upper-triangle tile schedule (causal
+block-sparsity — tiles strictly below the diagonal are never computed),
+and the per-core running ``(m, l, acc)`` state in VMEM is the
+thread-local accumulator whose 'accept' step is the final normalization.
+
+Supports GQA (q heads grouped over fewer kv heads), causal masking,
+sliding-window (local) attention, and Gemma-style logit soft-capping.
+
+Grid: ``(batch*q_heads, q_blocks, k_blocks)`` with the k dimension
+sequential ('arbitrary') so the VMEM scratch accumulates across k tiles;
+q/k tiles are MXU-aligned (multiples of 128 recommended).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention"]
+
+DEFAULT_MASK_VALUE = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 sm_scale: float, causal: bool, window: int | None,
+                 softcap: float, block_q: int, block_k: int, nk: int,
+                 kv_len: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # Tile visit predicate — the teamed-split triangle schedule:
+    # causal: skip tiles strictly above the diagonal (k block entirely
+    # in the future); window: skip tiles entirely before the window.
+    run = k_start < kv_len
+    if causal:
+        run = jnp.logical_and(run, k_start <= q_start + block_q - 1)
+    if window is not None:
+        run = jnp.logical_and(run, k_start + block_k > q_start - window)
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0].astype(jnp.float32)          # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)          # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)          # (block_k, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * sm_scale
+        if softcap > 0.0:
+            s = softcap * jnp.tanh(s / softcap)
+
+        rows = q_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 0)
+        cols = k_start + jax.lax.broadcasted_iota(jnp.int32,
+                                                  (block_q, block_k), 1)
+        mask = cols < kv_len
+        if causal:
+            mask = jnp.logical_and(mask, cols <= rows)
+        if window is not None:
+            mask = jnp.logical_and(mask, cols > rows - window)
+        s = jnp.where(mask, s, DEFAULT_MASK_VALUE)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)            # exp(-inf - finite) = 0
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(mask, p, 0.0)                # kill masked lanes exactly
+        l_ref[...] = alpha * l_prev + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, ...] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "sm_scale", "block_q",
+                     "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, softcap: float = 0.0,
+                    sm_scale: float | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """Tiled attention.
+
+    Args:
+      q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
+      window: sliding-window size (keys in ``(i-window, i]``), None = full.
+      softcap: Gemma logit soft-capping (0 disables).
+    Returns (B, Hq, Sq, D) in q.dtype.
+    """
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    if Hq % Hkv:
+        raise ValueError(f"Hq={Hq} not a multiple of Hkv={Hkv}")
+    if sm_scale is None:
+        sm_scale = 1.0 / math.sqrt(D)
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    q_pad = (-Sq) % block_q
+    k_pad = (-Skv) % block_k
+    kv_len = Skv
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, q_pad), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, k_pad), (0, 0)))
+    Sq_p, Skv_p = Sq + q_pad, Skv + k_pad
+
+    qf = q.reshape(B * Hq, Sq_p, D)
+    kf = k.reshape(B * Hkv, Skv_p, D)
+    vf = v.reshape(B * Hkv, Skv_p, D)
+    group = Hq // Hkv
+    nq = Sq_p // block_q
+    nk = Skv_p // block_k
+
+    def q_index(bh, qi, ki):
+        return (bh, qi, 0)
+
+    def kv_index(bh, qi, ki):
+        b = bh // Hq
+        h = bh % Hq
+        return (b * Hkv + h // group, ki, 0)
+
+    kernel = functools.partial(
+        _attn_kernel, sm_scale=sm_scale, causal=causal, window=window,
+        softcap=softcap, block_q=block_q, block_k=block_k, nk=nk,
+        kv_len=kv_len)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), q_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+            pl.BlockSpec((1, block_k, D), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, D), q_index),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq_p, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, D), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="flash_attention",
+    )(qf, kf, vf)
+    out = out.reshape(B, Hq, Sq_p, D)
+    if q_pad:
+        out = out[:, :, :Sq, :]
+    return out

@@ -1,0 +1,167 @@
+"""mLSTM (xLSTM matrix-memory) chunkwise Pallas TPU kernel.
+
+Stabilized recurrence (per batch·head, state C ∈ R^{d×d}, n ∈ R^d,
+stabilizer m ∈ R):
+
+  m_t = max(log σ(f̃_t) + m_{t-1}, ĩ_t)
+  C_t = e^{log σ(f̃_t)+m_{t-1}-m_t} C_{t-1} + e^{ĩ_t-m_t} k_t v_tᵀ
+  n_t = …same decays… n_{t-1} + e^{ĩ_t-m_t} k_t
+  h_t = (C_tᵀ q_t) / max(|n_t·q_t|, 1)
+
+Chunkwise-parallel form: within a chunk of length L the intra-chunk part
+is a masked attention-like product (MXU: QKᵀ with log-decay weights) and
+the inter-chunk part applies the carried (C, n, m) — the classic
+linear-attention chunking (GLA / mLSTM).  The carried state lives in
+VMEM scratch across the sequential chunk grid dimension.
+
+Grid: ``(batch*heads, s_chunks)``, chunk dim sequential.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["mlstm_chunkwise"]
+
+NEG_INF = float("-inf")
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref,
+                  cf_ref, nf_ref, mf_ref, c_ref, n_ref, m_ref, *,
+                  block_s: int, ns: int):
+    si = pl.program_id(1)
+
+    @pl.when(si == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)          # (L, d)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    ig = i_ref[0].astype(jnp.float32)         # (L,)
+    fg = jax.nn.log_sigmoid(f_ref[0].astype(jnp.float32))  # log f_t
+
+    C = c_ref[...]
+    n = n_ref[...]
+    m_prev = m_ref[0]
+
+    # cumulative log-decay within the chunk: b_t = sum_{s<=t} log f_s
+    b = jnp.cumsum(fg)                        # (L,)
+    # running stabilizer: m_t = max(b_t + m_prev, max_{s<=t}(b_t - b_s + i_s))
+    # track g_t = max_{s<=t} (i_s - b_s); then m_t = b_t + max(m_prev, g_t)
+    g = jax.lax.associative_scan(jnp.maximum, ig - b)
+    m_t = b + jnp.maximum(m_prev, g)          # (L,)
+    m_last = m_t[block_s - 1]
+
+    # intra-chunk masked scores: for s<=t: D_ts = exp(b_t - b_s + i_s - m_t)
+    log_d = (b[:, None] - b[None, :]) + ig[None, :] - m_t[:, None]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_s, block_s), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (block_s, block_s), 1)
+    log_d = jnp.where(cols <= rows, log_d, NEG_INF)
+    d_mat = jnp.exp(log_d)                    # (L, L)
+
+    s_mat = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    w = s_mat * d_mat                          # weighted intra scores
+
+    # inter-chunk: contribution of carried C with decay exp(b_t+m_prev-m_t)
+    inter_scale = jnp.exp(b + m_prev - m_t)    # (L,) ; m_prev=-inf → 0
+    inter_scale = jnp.where(jnp.isfinite(inter_scale), inter_scale, 0.0)
+    h_inter = jax.lax.dot_general(q, C, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    h_inter = h_inter * inter_scale[:, None]
+    n_inter = (q @ n) * inter_scale            # (L,)
+
+    h_num = h_inter + jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32)
+    # n_t·q_t = inter part + sum_{s<=t} D_ts <q_t, k_s> = inter + sum_s w_ts
+    nq = n_inter + jnp.sum(w, axis=1)
+    denom = jnp.maximum(jnp.abs(nq), 1.0)
+    o_ref[0, ...] = (h_num / denom[:, None]).astype(o_ref.dtype)
+
+    # state update to end of chunk:
+    # C_L = exp(b_L + m_prev - m_L) C_prev + sum_s exp(b_L - b_s + i_s - m_L) k_s v_s^T
+    carry_decay = jnp.exp(b[block_s - 1] + m_prev - m_last)
+    carry_decay = jnp.where(jnp.isfinite(carry_decay), carry_decay, 0.0)
+    upd = jnp.exp(b[block_s - 1] - b + ig - m_last)    # (L,)
+    kv = jax.lax.dot_general(k * upd[:, None], v, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    c_ref[...] = carry_decay * C + kv
+    n_ref[...] = carry_decay * n + jnp.sum(k * upd[:, None], axis=0)
+    m_ref[0] = m_last
+
+    @pl.when(si == ns - 1)
+    def _emit_state():
+        cf_ref[0, ...] = c_ref[...]
+        nf_ref[0, ...] = n_ref[...]
+        mf_ref[0, ...] = m_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, block_s: int = 64,
+                    interpret: bool = False):
+    """Chunkwise mLSTM.
+
+    q, k, v: (BH, S, d); i_gate, f_gate: (BH, S) pre-activations.
+    Returns h: (BH, S, d) in q.dtype.
+    """
+    BH, S, d = q.shape
+    block_s = min(block_s, S)
+    pad = (-S) % block_s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        i_gate = jnp.pad(i_gate, ((0, 0), (0, pad)),
+                         constant_values=NEG_INF)  # no update from padding
+        f_gate = jnp.pad(f_gate, ((0, 0), (0, pad)),
+                         constant_values=60.0)     # log_sigmoid ≈ 0: keep state
+    Sp = S + pad
+    ns = Sp // block_s
+    scale = 1.0 / math.sqrt(d)
+    q = q * scale
+    k = k * scale
+
+    kernel = functools.partial(_mlstm_kernel, block_s=block_s, ns=ns)
+    h, c_f, n_f, m_f = pl.pallas_call(
+        kernel,
+        grid=(BH, ns),
+        in_specs=[
+            pl.BlockSpec((1, block_s, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, block_s), lambda b, s: (b, s)),
+            pl.BlockSpec((1, block_s), lambda b, s: (b, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, d), lambda b, s: (b, s, 0)),
+            pl.BlockSpec((1, d, d), lambda b, s: (b, 0, 0)),
+            pl.BlockSpec((1, d), lambda b, s: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b, s: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sp, d), q.dtype),
+            jax.ShapeDtypeStruct((BH, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, d), jnp.float32),
+            jax.ShapeDtypeStruct((BH, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((d, d), jnp.float32),
+            pltpu.VMEM((d,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="mlstm_chunkwise",
+    )(q, k, v, i_gate, f_gate)
+    if pad:
+        h = h[:, :S, :]
+    return h, (c_f, n_f, m_f[:, 0])

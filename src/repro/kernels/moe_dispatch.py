@@ -1,0 +1,109 @@
+"""MoE dispatch / combine Pallas TPU kernels.
+
+These are the on-chip half of the paper's relocation engine (§5.3): the
+``CollectiveMoveManager`` serializes registered entries into
+per-destination buffers before the Alltoallv — on TPU the analogous hot
+spot is packing token rows into expert-capacity buffers (dispatch) and
+the weighted 'accept' of expert outputs back into token order (combine).
+
+Both kernels use scalar prefetch (``PrefetchScalarGridSpec``): the
+routing tables (row indices / slot maps) are prefetched to SMEM and
+drive the BlockSpec ``index_map``, so each grid step DMAs exactly one
+row from its dynamically-chosen source — a data-movement kernel with no
+wasted HBM traffic (vs. the one-hot einsum dispatch which burns
+O(T·E·C·D) MXU flops).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["gather_rows", "moe_combine"]
+
+
+def _gather_kernel(idx_ref, x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows(x: jnp.ndarray, idx: jnp.ndarray, *,
+                interpret: bool = False) -> jnp.ndarray:
+    """out[i] = x[idx[i]] — dispatch packing by prefetched row index.
+
+    x: (N, D); idx: (M,) int32 in [0, N). Returns (M, D).
+    """
+    N, D = x.shape
+    M = idx.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(M,),
+        in_specs=[pl.BlockSpec((1, D), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, D), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, D), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+        name="moe_gather_rows",
+    )(idx.astype(jnp.int32), x)
+
+
+def _combine_kernel(safe_ref, raw_ref, w_ref, y_ref, o_ref, acc_ref, *,
+                    topk: int):
+    t = pl.program_id(0)
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid = raw_ref[t, k] >= 0
+    w = jnp.where(valid, w_ref[t, k], 0.0).astype(jnp.float32)
+    acc_ref[...] += w * y_ref[...].astype(jnp.float32)
+
+    @pl.when(k == topk - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_combine(y: jnp.ndarray, slots: jnp.ndarray, weights: jnp.ndarray, *,
+                interpret: bool = False) -> jnp.ndarray:
+    """out[t] = sum_k weights[t, k] * y[slots[t, k]] (slot<0 → skip).
+
+    y: (S, D) expert outputs in slot order; slots: (T, K) int32;
+    weights: (T, K) float. Returns (T, D) in y.dtype.
+
+    Scalar prefetch carries three tables: clamped slots (drive the
+    ``index_map`` DMA), raw slots (validity), weights. The accumulate
+    over K runs in VMEM scratch — the paper's accumulator 'accept'.
+    """
+    S, D = y.shape
+    T, K = slots.shape
+    safe_slots = jnp.where(slots >= 0, slots, 0).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # safe slots, raw slots, weights
+        grid=(T, K),
+        in_specs=[pl.BlockSpec(
+            (1, D), lambda t, k, safe_ref, raw_ref, w_ref: (safe_ref[t, k], 0))],
+        out_specs=pl.BlockSpec(
+            (1, D), lambda t, k, safe_ref, raw_ref, w_ref: (t, 0)),
+        scratch_shapes=[pltpu.VMEM((1, D), jnp.float32)],
+    )
+    kernel = functools.partial(_combine_kernel, topk=K)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, D), y.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+        name="moe_combine",
+    )(safe_slots, slots.astype(jnp.int32), weights, y)

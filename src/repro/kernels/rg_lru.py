@@ -1,0 +1,106 @@
+"""RG-LRU Pallas TPU kernel (RecurrentGemma / Griffin recurrent block).
+
+Recurrence: ``h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * x_t`` with the
+gated decay ``a_t`` precomputed by the layer (see models/rglru.py).
+
+Blocking: grid ``(batch, d_blocks, s_blocks)`` — the sequence dimension
+is sequential ('arbitrary') with the hidden state carried across blocks
+in VMEM scratch; batch and feature blocks are parallel.  Within a block
+the recurrence runs as a ``fori_loop`` over time with full-lane vector
+ops (VPU work, no MXU), reading/writing (1, block_d) rows.
+
+This is the collection-relocation-friendly formulation: the carried
+state ``h`` is exactly the per-sequence entry that relocates with its
+sequence when the serving balancer moves work between replicas.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rg_lru"]
+
+
+def _rg_lru_kernel(x_ref, a_ref, h0_ref, o_ref, hlast_ref, h_ref, *,
+                   block_s: int, ns: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)      # (block_s, block_d)
+    a = a_ref[0].astype(jnp.float32)      # (block_s, block_d)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * x
+
+    def step(t, carry):
+        h = carry
+        h = a[t] * h + b[t]
+        o_ref[0, t, :] = h.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, block_s, step, h_ref[...])
+    h_ref[...] = h
+
+    @pl.when(si == ns - 1)
+    def _done():
+        hlast_ref[0, ...] = h.astype(hlast_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_s", "block_d", "interpret"))
+def rg_lru(x, a, h0=None, *, block_s: int = 128, block_d: int = 128,
+           interpret: bool = False):
+    """Blocked RG-LRU scan.
+
+    x, a: (B, S, D) — input and per-step decay in (0, 1).
+    h0: (B, D) initial state (zeros if None).
+    Returns (h_seq (B, S, D) in x.dtype, h_last (B, D) float32).
+    """
+    B, S, D = x.shape
+    if h0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+    block_s = min(block_s, S)
+    block_d = min(block_d, D)
+    s_pad = (-S) % block_s
+    d_pad = (-D) % block_d
+    if s_pad or d_pad:
+        x = jnp.pad(x, ((0, 0), (0, s_pad), (0, d_pad)))
+        # pad decay with 1 (carry state through padding unchanged)
+        a = jnp.pad(a, ((0, 0), (0, s_pad), (0, d_pad)),
+                    constant_values=1.0)
+        h0 = jnp.pad(h0, ((0, 0), (0, d_pad)))
+    Sp, Dp = S + s_pad, D + d_pad
+    ns = Sp // block_s
+
+    kernel = functools.partial(_rg_lru_kernel, block_s=block_s, ns=ns)
+    h_seq, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, Dp // block_d, ns),
+        in_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_d), lambda b, d, s: (b, d)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_s, block_d), lambda b, d, s: (b, s, d)),
+            pl.BlockSpec((1, block_d), lambda b, d, s: (b, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, Dp), x.dtype),
+            jax.ShapeDtypeStruct((B, Dp), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name="rg_lru",
+    )(x, a, h0)
+    if s_pad or d_pad:
+        h_seq = h_seq[:, :S, :D]
+        h_last = h_last[:, :D]
+    return h_seq, h_last

@@ -1,0 +1,316 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this lowers the real step (train_step / prefill / decode)
+against ShapeDtypeStruct inputs on the production mesh, compiles it, and
+records memory_analysis / cost_analysis / collective bytes — the inputs
+to EXPERIMENTS.md §Dry-run and §Roofline.
+
+Accounting notes (see EXPERIMENTS.md §Dry-run):
+* XLA's cost_analysis counts while-loop bodies ONCE, so scanned-layer
+  modules under-report flops by ~n_layers.  Train cells therefore lower
+  with the layer loop unrolled (also the memory-accurate configuration:
+  the CPU SPMD partitioner loses fsdp sharding on scan-transposed weight
+  grads).  Decode/prefill cells compile scanned (fwd-only, memory is
+  exact) and derive exact roofline terms from a depth-1/depth-2 unrolled
+  pair: cost(L) = cost(L1) + (periods-1) · [cost(L2) - cost(L1)].
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+      --shape train_4k [--multi-pod] [--out experiments/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, cells_for, get_config
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_parallel, make_production_mesh
+from repro.models import zoo
+from repro.models.transformer import param_partition_specs
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.shapes import SHAPES
+from repro.train.step import batch_sharding, build_train_step
+
+# per-arch runtime policy for the big configs (see DESIGN.md §6)
+TRAIN_OVERRIDES = {
+    "deepseek-v3-671b": dict(opt=AdamWConfig(moments_dtype="int8")),
+    "gemma2-27b": dict(opt=AdamWConfig(moments_dtype="int8")),
+    "gemma3-12b": dict(opt=AdamWConfig(moments_dtype="int8")),
+    "deepseek-v2-lite-16b": dict(opt=AdamWConfig(moments_dtype="int8")),
+}
+
+
+def _sharding_tree(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _model_flops(cfg, cell) -> float:
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        if cfg.is_encoder_decoder:
+            tokens = cell.global_batch * (min(cfg.max_target_len, cell.seq_len)
+                                          + cell.seq_len)
+        return 6.0 * n_active * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * cell.global_batch  # decode: 1 token/seq
+
+
+def lower_cell(arch: str, cell, multi_pod: bool, *, remat: str | None = None,
+               cfg=None):
+    cfg = cfg or get_config(arch)
+    if cell.kind == "train":
+        # training always runs rematerialized at this scale
+        cfg = dataclasses.replace(
+            cfg, remat=remat or (cfg.remat if cfg.remat != "none" else "full"))
+        if not cfg.loss_chunk:
+            cfg = dataclasses.replace(cfg, loss_chunk=512)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    par = make_parallel(mesh, fsdp=(cell.kind == "train"))
+    n_devices = mesh.devices.size
+
+    if cell.kind == "train":
+        ov = TRAIN_OVERRIDES.get(cfg.name, {})
+        tokens_per_dev = cell.global_batch * cell.seq_len // max(
+            par.n_batch_shards, 1)
+        accum = ov.get("accum", max(1, tokens_per_dev // 16384))
+        while cell.global_batch % (accum * par.n_batch_shards) and accum > 1:
+            accum -= 1
+        step, pspecs, ospecs = build_train_step(
+            cfg, par, ov.get("opt"), accum=accum, zero1=True)
+        pshape = zoo.abstract_params(cfg)
+        oshape = jax.eval_shape(lambda p: adamw_init(p, ov.get("opt")), pshape)
+        specs = zoo.input_specs(cfg, cell, par)
+        bspec = specs["batch"]
+        if accum > 1:
+            def split(key, s):
+                if key == "mrope_positions":  # (3, B, S): batch is dim 1
+                    return jax.ShapeDtypeStruct(
+                        (accum, 3, s.shape[1] // accum) + s.shape[2:], s.dtype)
+                return jax.ShapeDtypeStruct(
+                    (accum, s.shape[0] // accum) + s.shape[1:], s.dtype)
+            bspec = {k: split(k, v) for k, v in bspec.items()}
+        with jax.set_mesh(mesh):
+            lowered = step.lower(pshape, oshape, bspec)
+    elif cell.kind == "prefill":
+        pshape = zoo.abstract_params(cfg)
+        pspecs = param_partition_specs(cfg, par, pshape)
+        bspecs = batch_sharding(cfg, par)
+        fn = zoo.prefill_fn(cfg, par, s_cache=cell.seq_len)
+        jfn = jax.jit(fn, in_shardings=(_sharding_tree(mesh, pspecs),
+                                        _sharding_tree(mesh, bspecs)))
+        specs = zoo.input_specs(cfg, cell, par)
+        with jax.set_mesh(mesh):
+            lowered = jfn.lower(pshape, specs["batch"])
+    else:  # decode
+        pshape = zoo.abstract_params(cfg)
+        pspecs = param_partition_specs(cfg, par, pshape)
+        sspecs = zoo.decode_state_partition_specs(cfg, par,
+                                                  cell.global_batch,
+                                                  cell.seq_len)
+        tok_spec = P(par.batch_axes if cell.global_batch > 1 else None, None)
+        logits_spec = P(par.batch_axes if cell.global_batch > 1 else None,
+                        par.model_axis)
+        fn = zoo.decode_fn(cfg, par)
+        jfn = jax.jit(fn,
+                      in_shardings=(_sharding_tree(mesh, pspecs),
+                                    _sharding_tree(mesh, sspecs),
+                                    NamedSharding(mesh, tok_spec)),
+                      out_shardings=(_sharding_tree(mesh, sspecs),
+                                     NamedSharding(mesh, logits_spec)),
+                      donate_argnums=(1,))
+        specs = zoo.input_specs(cfg, cell, par)
+        with jax.set_mesh(mesh):
+            lowered = jfn.lower(pshape, specs["state"], specs["token_ids"])
+    return cfg, lowered, n_devices
+
+
+def _cost_of(compiled, n_devices):
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = hlo_analysis.parse_collectives(hlo, n_devices)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "wire_bytes": coll.wire_bytes,
+        "collective_counts": coll.counts,
+    }
+
+
+def _depth_pair_costs(arch, cell, multi_pod):
+    """Exact per-period cost slope from unrolled depth-1/2 variants.
+
+    For train cells this also yields the memory-fit estimate: the CPU
+    SPMD partitioner keeps scan-transposed weight grads unsharded (an
+    artifact a TPU GSPMD build does not have), so the full scanned
+    temp_bytes over-reports; the unrolled small-depth pair extrapolates
+    the true per-period growth."""
+    base = get_config(arch)
+    period = len(base.pattern)
+    remainder = (base.n_layers - base.first_dense_layers) % period
+    n_periods = (base.n_layers - base.first_dense_layers) // period
+
+    def shrink(k):
+        cfg = dataclasses.replace(
+            base,
+            n_layers=base.first_dense_layers + k * period + remainder,
+            scan_layers=False)
+        if base.is_encoder_decoder:
+            enc_period = max(len(base.encoder_pattern), 1)
+            cfg = dataclasses.replace(cfg, encoder_layers=k * enc_period)
+        return cfg
+
+    costs = []
+    temps = []
+    for k in (1, 2):
+        _, lowered, nd = lower_cell(arch, cell, multi_pod, cfg=shrink(k))
+        compiled = lowered.compile()
+        costs.append(_cost_of(compiled, nd))
+        temps.append(compiled.memory_analysis().temp_size_in_bytes)
+    slope = {k: costs[1][k] - costs[0][k]
+             for k in ("flops", "bytes", "wire_bytes")}
+    full = {k: costs[0][k] + (n_periods - 1) * slope[k]
+            for k in ("flops", "bytes", "wire_bytes")}
+    full["collective_counts"] = costs[0]["collective_counts"]
+    full["extrapolated_from_depths"] = [1, 2]
+    full["n_periods"] = n_periods
+    full["temp_bytes_extrapolated"] = int(
+        temps[0] + (n_periods - 1) * max(temps[1] - temps[0], 0))
+    return full
+
+
+def run_cell(arch: str, cell, multi_pod: bool, out_dir: Path,
+             keep_hlo: bool = False, roofline: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch}_{cell.name}_{mesh_name}"
+    t0 = time.time()
+    cfg, lowered, n_devices = lower_cell(arch, cell, multi_pod)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    if roofline:
+        cost = _depth_pair_costs(arch, cell, multi_pod)
+    else:
+        cost = _cost_of(compiled, n_devices)
+
+    coll = hlo_analysis.CollectiveStats(
+        counts=cost.get("collective_counts", {}),
+        wire_bytes=cost["wire_bytes"])
+    terms = hlo_analysis.roofline_terms(
+        {"flops": cost["flops"], "bytes accessed": cost["bytes"]}, coll,
+        model_flops=_model_flops(cfg, cell), n_devices=n_devices)
+
+    result = {
+        "arch": cfg.name,
+        "shape": cell.name,
+        "mesh": mesh_name,
+        "n_devices": n_devices,
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "temp_bytes_unrolled_extrapolated":
+                cost.get("temp_bytes_extrapolated"),
+        },
+        "roofline": terms,
+        "param_counts": cfg.param_counts(),
+    }
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=2))
+    if keep_hlo:
+        (out_dir / f"{tag}.hlo.txt").write_text(compiled.as_text())
+    print(f"[dryrun] {tag}: OK compile={t_compile:.0f}s "
+          f"temp={result['memory']['temp_bytes'] / 1e9:.1f}GB "
+          f"bottleneck={terms['bottleneck']} "
+          f"roofline_frac={terms.get('roofline_fraction', 0):.3f}", flush=True)
+    print(f"  memory_analysis: {mem}")
+    print(f"  cost_analysis: flops={cost['flops']:.3e} "
+          f"bytes={cost['bytes']:.3e} wire={cost['wire_bytes']:.3e}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--keep-hlo", action="store_true")
+    ap.add_argument("--no-roofline", action="store_true",
+                    help="skip the depth-pair cost extrapolation")
+    ap.add_argument("--halt-on-error", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        for cell in SHAPES:
+            if args.shape and cell.name != args.shape:
+                continue
+            status = dict(cells_for(cfg))[cell.name]
+            if status != "run":
+                print(f"[dryrun] {arch}_{cell.name}: {status}", flush=True)
+                out_dir.mkdir(parents=True, exist_ok=True)
+                for mp in meshes:
+                    mesh_name = "pod2x16x16" if mp else "pod16x16"
+                    (out_dir / f"{arch}_{cell.name}_{mesh_name}.json").write_text(
+                        json.dumps({"arch": arch, "shape": cell.name,
+                                    "mesh": mesh_name, "status": status}))
+                continue
+            for mp in meshes:
+                try:
+                    # roofline extrapolation only needed on the single pod
+                    run_cell(arch, cell, mp, out_dir,
+                             keep_hlo=args.keep_hlo,
+                             roofline=(not args.no_roofline) and not mp)
+                except Exception as e:  # noqa: BLE001
+                    mesh_name = "pod2x16x16" if mp else "pod16x16"
+                    tag = f"{arch}_{cell.name}_{mesh_name}"
+                    print(f"[dryrun] {tag}: FAIL {e}", flush=True)
+                    traceback.print_exc()
+                    failures.append(tag)
+                    out_dir.mkdir(parents=True, exist_ok=True)
+                    (out_dir / f"{tag}.json").write_text(json.dumps(
+                        {"arch": arch, "shape": cell.name, "mesh": mesh_name,
+                         "status": f"fail: {e}"}))
+                    if args.halt_on_error:
+                        raise
+    if failures:
+        print(f"[dryrun] FAILURES: {failures}")
+        raise SystemExit(1)
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

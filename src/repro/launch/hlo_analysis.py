@@ -1,0 +1,139 @@
+"""Roofline-term extraction from compiled artifacts.
+
+``compiled.cost_analysis()`` supplies HLO FLOPs and bytes accessed;
+collective bytes are NOT in cost_analysis, so we parse the optimized HLO
+text and sum the operand sizes of every collective op, weighting each by
+its ring-traffic factor (an op moving S bytes over a group of n links
+puts ~S·(n-1)/n on the wire; all-reduce is 2× that).
+
+Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+@dataclass
+class HW:
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-reduce.1 = f32[1024,512]{1,0} all-reduce(...)
+#       ROOT %t = (f32[8]{0}, f32[4]{0}) all-reduce(...)
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)          # op -> count
+    result_bytes: dict = field(default_factory=dict)    # op -> per-device bytes
+    wire_bytes: float = 0.0                             # ring-model per-device
+
+    def to_dict(self):
+        return {"counts": self.counts, "result_bytes": self.result_bytes,
+                "wire_bytes": self.wire_bytes}
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int) -> CollectiveStats:
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(type_str)
+        n = max(_group_size(line, n_devices), 1)
+        ring = (n - 1) / n
+        if op == "all-reduce":
+            wire = 2.0 * nbytes * ring
+        elif op == "all-gather":
+            wire = nbytes * ring           # result is the gathered buffer
+        elif op == "reduce-scatter":
+            wire = nbytes * (n - 1)        # result is the scattered shard
+        elif op == "all-to-all":
+            wire = nbytes * ring
+        else:  # collective-permute
+            wire = float(nbytes)
+        st.counts[op] = st.counts.get(op, 0) + 1
+        st.result_bytes[op] = st.result_bytes.get(op, 0) + nbytes
+        st.wire_bytes += wire
+    return st
+
+
+def roofline_terms(cost: dict, coll: CollectiveStats, hw: HW | None = None,
+                   model_flops: float | None = None,
+                   n_devices: int = 1) -> dict:
+    """Three roofline terms (seconds, per device) + bottleneck."""
+    hw = hw or HW()
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_acc / hw.hbm_bw
+    t_collective = coll.wire_bytes / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    out = {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_wire_bytes_per_device": coll.wire_bytes,
+        "collective_counts": coll.counts,
+    }
+    if model_flops is not None:
+        per_dev_model = model_flops / max(n_devices, 1)
+        out["model_flops_per_device"] = per_dev_model
+        out["useful_flops_ratio"] = (per_dev_model / flops) if flops else 0.0
+        # roofline fraction: useful model flops vs what the dominant term
+        # would allow in the same wall time
+        t_dom = max(terms.values())
+        out["roofline_fraction"] = (
+            (per_dev_model / hw.peak_flops) / t_dom if t_dom > 0 else 0.0)
+    return out

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function, not a module-level constant — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_parallel"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_parallel(mesh, *, fsdp: bool = False, seq_shard_decode: bool = False):
+    from ..models.parallel import Parallel
+    if mesh is None:
+        return Parallel(mesh=None)
+    batch_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    return Parallel(mesh=mesh, batch_axes=batch_axes, model_axis="model",
+                    fsdp=fsdp, seq_shard_decode=seq_shard_decode)

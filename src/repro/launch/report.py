@@ -1,0 +1,57 @@
+"""Aggregate experiments/dryrun JSONs into the EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def fmt_b(b):
+    if b is None:
+        return "-"
+    return f"{b / 1e9:.1f}"
+
+
+def main(out_dir="experiments/dryrun"):
+    rows = []
+    for f in sorted(Path(out_dir).glob("*.json")):
+        j = json.loads(f.read_text())
+        rows.append(j)
+
+    def table(mesh, include_roofline):
+        print(f"\n### Mesh {mesh}\n")
+        if include_roofline:
+            print("| arch | shape | status | temp GB (scan / unroll-extrap) | compute_s | memory_s | collective_s | bottleneck | MODEL/HLO flops | roofline frac |")
+            print("|---|---|---|---|---|---|---|---|---|---|")
+        else:
+            print("| arch | shape | status | temp GB | compile_s |")
+            print("|---|---|---|---|---|")
+        for j in rows:
+            if j.get("mesh", "") != mesh and not (
+                    j.get("status", "").startswith("skip") ):
+                continue
+            if j.get("status", "").startswith("skip"):
+                if (mesh == "pod16x16") != (j.get("mesh") == "pod16x16"):
+                    continue
+            name = f"| {j['arch']} | {j['shape']} "
+            if j.get("status") != "ok":
+                print(name + f"| {j.get('status')} |" + (" - |" * (7 if include_roofline else 2)))
+                continue
+            m = j["memory"]
+            if include_roofline:
+                r = j["roofline"]
+                print(name +
+                      f"| ok | {fmt_b(m['temp_bytes'])} / {fmt_b(m.get('temp_bytes_unrolled_extrapolated'))} "
+                      f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+                      f"| {r['collective_s']:.2e} | {r['bottleneck']} "
+                      f"| {r.get('useful_flops_ratio', 0):.2f} "
+                      f"| {r.get('roofline_fraction', 0):.3f} |")
+            else:
+                print(name + f"| ok | {fmt_b(m['temp_bytes'])} | {j['compile_s']} |")
+
+    table("pod16x16", True)
+    table("pod2x16x16", False)
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

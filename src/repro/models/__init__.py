@@ -1,0 +1,7 @@
+"""Model zoo: composable blocks covering all 10 assigned architectures."""
+from . import attention, config, layers, moe, parallel, rglru, ssm, transformer, zoo
+from .config import LayerSlot, ModelConfig
+from .parallel import Parallel
+
+__all__ = ["attention", "config", "layers", "moe", "parallel", "rglru",
+           "ssm", "transformer", "zoo", "LayerSlot", "ModelConfig", "Parallel"]

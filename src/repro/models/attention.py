@@ -1,0 +1,214 @@
+"""GQA attention: training/prefill path, decode-with-cache path, and the
+sequence-parallel (flash-decoding) cache path for 500k-token contexts.
+
+The score computation consumes the triangle tile schedule
+(core/product.py ≙ kernels/flash_attention.py); the decode path reads a
+KV cache whose pages are ``ChunkedList`` ranges managed by
+serving/cache.py — relocatable between replicas by the balancer.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import dense, dense_init, mrope, rmsnorm, rmsnorm_init, rope
+
+
+def _constrain_heads(par, x, n_heads_dim: int):
+    """Pin (B, S, H, hd) tensors to batch×head sharding when the head
+    count divides the model axis (GSPMD otherwise bounces layouts)."""
+    if par is None or par.mesh is None or not par.attn_constrain:
+        return x
+    if x.shape[n_heads_dim] % par.mesh.shape[par.model_axis]:
+        return x
+    spec = [None] * x.ndim
+    spec[0] = par.batch_axes
+    spec[n_heads_dim] = par.model_axis
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(par.mesh, P(*spec)))
+
+__all__ = ["attn_init", "attn_forward", "attn_decode",
+           "attn_decode_project", "attn_attend_cache",
+           "seq_parallel_decode_attention"]
+
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype, bias=cfg.qkv_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+    k = dense(p["wk"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense(p["wv"], x).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.mrope_sections:
+        if positions.ndim == 2:  # decode/text: t=h=w position streams
+            positions = jnp.broadcast_to(positions[None],
+                                         (3,) + positions.shape)
+        q = mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        pos = positions if positions.ndim == 2 else positions[0]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_forward(p, cfg: ModelConfig, x, positions, *, causal=True,
+                 window=None, kv_override=None, impl=None, par=None):
+    """Full-sequence attention (train / prefill).
+
+    kv_override: (k, v) from an encoder for cross-attention — positions
+    then apply to q only and no mask is causal.
+    Returns (out, (k, v)) so prefill can seed the cache.
+    """
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if kv_override is None:
+        q, k, v = _project_qkv(p, cfg, x, positions)
+    else:
+        q = dense(p["wq"], x).reshape(B, S, cfg.n_heads, hd)
+        if cfg.qk_norm:
+            q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k, v = kv_override
+        causal = False
+    q = _constrain_heads(par, q, 2)
+    k = _constrain_heads(par, k, 2)
+    v = _constrain_heads(par, v, 2)
+    out = ops.attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        softcap=cfg.attn_softcap, impl=impl)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * hd)
+    return dense(p["wo"], out), (k, v)
+
+
+def attn_decode_project(p, cfg: ModelConfig, x, positions):
+    """Decode-side QKV projection; caller writes k/v into the cache
+    *before* attending (write-then-attend keeps every tensor in the
+    cache's static layout — no concat that breaks the seq sharding)."""
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    return q, k_new[:, 0], v_new[:, 0]
+
+
+def attn_attend_cache(p, cfg: ModelConfig, q, cache_k, cache_v, cache_pos,
+                      cur, *, window=None):
+    """Attend a single query against the (already updated) cache.
+
+    ``cache_pos`` (B, S_cache) holds the *global position* stored in each
+    cache slot, or -1 for empty — one mask covers both contiguous full
+    caches and ring-buffer sliding-window caches (slot = pos % W).
+
+    q: (B, 1, Hq, hd); cur: (B, 1) current position (included in mask).
+    """
+    B = q.shape[0]
+    hd = cfg.resolved_head_dim
+    valid = (cache_pos >= 0) & (cache_pos <= cur)     # (B, S_cache)
+    if window is not None:
+        valid &= cache_pos > (cur - window)
+
+    group = cfg.n_heads // cfg.n_kv_heads
+    qh = q.reshape(B, cfg.n_kv_heads, group, hd).astype(jnp.float32)
+    kf = cache_k.astype(jnp.float32)                # (B, S_cache, Hkv, hd)
+    s = jnp.einsum("bkgd,bskd->bkgs", qh, kf) / math.sqrt(hd)
+    if cfg.attn_softcap > 0:
+        s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    m = jax.lax.stop_gradient(jnp.max(s, axis=-1, keepdims=True))
+    pr = jnp.exp(s - jnp.where(jnp.isfinite(m), m, 0.0))
+    pr = jnp.where(valid[:, None, None, :], pr, 0.0)
+    denom = jnp.maximum(jnp.sum(pr, axis=-1, keepdims=True), 1e-20)
+    vf = cache_v.astype(jnp.float32)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr / denom, vf)
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(cache_k.dtype)
+    return dense(p["wo"], out)
+
+
+def attn_decode(p, cfg: ModelConfig, x, positions, cache_k, cache_v,
+                cache_pos, *, window=None):
+    """Legacy single-call decode (project → write → attend). Reference
+    for tests; the scan path in transformer.py calls the pieces."""
+    B = x.shape[0]
+    q, k_new, v_new = attn_decode_project(p, cfg, x, positions)
+    cur = positions.reshape(B, 1)
+    size = cache_k.shape[1]
+    slot = (cur[:, 0] % size).astype(jnp.int32)
+    bidx = jnp.arange(B)
+    ck = cache_k.at[bidx, slot].set(k_new.astype(cache_k.dtype))
+    cv = cache_v.at[bidx, slot].set(v_new.astype(cache_v.dtype))
+    cp = cache_pos.at[bidx, slot].set(cur[:, 0])
+    out = attn_attend_cache(p, cfg, q, ck, cv, cp, cur, window=window)
+    return out, k_new, v_new
+
+
+def seq_parallel_decode_attention(q, k_new, v_new, cache_k, cache_v,
+                                  cache_pos, cur, *, axis_name: str,
+                                  softcap: float = 0.0,
+                                  window: int | None = None):
+    """Flash-decoding over a sequence-sharded KV cache (long_500k path).
+
+    Each shard holds a slice of the cache along the sequence dim with its
+    slice of ``cache_pos``; computes partial (max, sum, weighted-V) over
+    its slice; combines across shards with a numerically-stable
+    pmax/psum LSE merge — the teamed-reduction (§4.8) applied to decode.
+
+    q: (B, Hkv, group, hd); k_new/v_new: (B, Hkv, hd) current token
+    (attended by every shard exactly once: only the shard that owns the
+    write slot includes it — the caller passes k_new only on the owner
+    via masking, here we include it on shard where ``own_new`` mask set).
+    cache_k/v: (B, S_local, Hkv, hd); cache_pos: (B, S_local); cur: (B, 1).
+    Returns (B, Hkv, group, hd) float32.
+    """
+    B, S_local, Hkv, hd = cache_k.shape
+    valid = (cache_pos >= 0) & (cache_pos < cur)             # (B, S_local)
+    if window is not None:
+        valid &= cache_pos > (cur - window)
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                   cache_k.astype(jnp.float32)) / math.sqrt(hd)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+
+    # the new token is included only on shard 0 (exactly-once semantics)
+    include_new = jax.lax.axis_index(axis_name) == 0
+    s_new = jnp.einsum("bkgd,bkd->bkg", q.astype(jnp.float32),
+                       k_new.astype(jnp.float32))[..., None] / math.sqrt(hd)
+    if softcap > 0:
+        s_new = softcap * jnp.tanh(s_new / softcap)
+    s_new = jnp.where(include_new, s_new, -jnp.inf)
+
+    m_local = jnp.maximum(jnp.max(s, axis=-1), s_new[..., 0])
+    m_global = jax.lax.pmax(m_local, axis_name)
+    m_safe = jnp.where(jnp.isfinite(m_global), m_global, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    p_new = jnp.where(include_new, jnp.exp(s_new - m_safe[..., None]), 0.0)
+    l_local = jnp.sum(p, axis=-1) + p_new[..., 0]
+    num_local = jnp.einsum("bkgs,bskd->bkgd", p, cache_v.astype(jnp.float32)) \
+        + p_new * v_new.astype(jnp.float32)[:, :, None, :]
+    l_global = jax.lax.psum(l_local, axis_name)
+    num_global = jax.lax.psum(num_local, axis_name)
+    return num_global / jnp.maximum(l_global, 1e-20)[..., None]

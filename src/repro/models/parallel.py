@@ -1,0 +1,68 @@
+"""Parallelism context threaded through model code.
+
+Maps the paper's ``TeamedPlaceGroup`` onto mesh axes: the batch axes are
+the data-parallel team, the model axis is the tensor/expert-parallel
+team, and shard_map islands (MoE dispatch, vocab-parallel loss,
+seq-parallel decode) are the 'teamed operations' — everything else is
+GSPMD with sharding constraints.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["Parallel", "constrain"]
+
+
+@dataclass(frozen=True)
+class Parallel:
+    mesh: Optional[Mesh] = None
+    batch_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp: bool = False                  # shard params over batch_axes[-1] too
+    seq_shard_decode: bool = False      # long-context: KV cache sharded on seq
+    pipeline_axis: Optional[str] = None
+    # §Perf optimization: pin attention tensors to head-sharded layout
+    # (kills GSPMD's involuntary replication reshards when heads divide
+    # the model axis); False = paper-faithful baseline (GSPMD decides)
+    attn_constrain: bool = False
+
+    @property
+    def n_batch_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(
+            __import__("math").prod(self.mesh.shape[a] for a in self.batch_axes))
+
+    @property
+    def n_model_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.model_axis])
+
+    @property
+    def all_axes(self) -> tuple[str, ...]:
+        return self.batch_axes + (self.model_axis,)
+
+    # common specs ------------------------------------------------------
+    def batch_spec(self, *rest) -> P:
+        return P(self.batch_axes, *rest)
+
+    def token_flat_spec(self) -> P:
+        """Tokens flattened (B*S, d) sharded over every axis (MoE)."""
+        return P(self.all_axes, None)
+
+    def sharding(self, spec: P) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+
+def constrain(par: Parallel, x, spec: P):
+    if par.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(par.mesh, spec))

@@ -1,0 +1,95 @@
+"""Griffin / RecurrentGemma recurrent block: causal conv + RG-LRU.
+
+Sequence path uses the blocked Pallas scan (kernels/rg_lru.py); decode
+is a single-step update whose state (LRU hidden + conv tail) is a
+fixed-schema pytree — a relocatable entry for the serving balancer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import dense, dense_init
+
+__all__ = ["rglru_block_init", "rglru_block", "rglru_block_step",
+           "rglru_empty_state"]
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def rglru_block_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    rec = cfg.rec_dim or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a^c spans (0.9, 0.999) as in Griffin
+    lam = jnp.log(jnp.expm1(  # inverse softplus
+        -jnp.log(jnp.linspace(0.9, 0.999, rec)) / _C))
+    return {
+        "w_gate": dense_init(ks[0], d, rec, dtype),
+        "w_x": dense_init(ks[1], d, rec, dtype),
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, rec), jnp.float32)
+                 / math.sqrt(cfg.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((rec,), dtype),
+        "w_rg": dense_init(ks[3], rec, rec, dtype, bias=True),  # recurrence gate
+        "w_ig": dense_init(ks[4], rec, rec, dtype, bias=True),  # input gate
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[5], rec, d, dtype),
+    }
+
+
+def _causal_conv(w, b, x, tail=None):
+    """Depthwise causal conv. x: (B, S, rec); tail: (B, W-1, rec) carried
+    inputs from previous steps (decode) or None (zeros)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(W))
+    return out + b, xp[:, -(W - 1):, :]
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(dense(p["w_rg"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(p["w_ig"], u).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B, S, rec)
+    a = jnp.exp(log_a)
+    return a, i
+
+
+def rglru_block(p, cfg: ModelConfig, x, *, impl=None, return_state=False):
+    """x: (B, S, d) → (B, S, d) [, final {h, conv_tail} state]."""
+    gate = jax.nn.gelu(dense(p["w_gate"], x), approximate=True)
+    u_raw = dense(p["w_x"], x)
+    u, tail = _causal_conv(p["conv"], p["conv_b"], u_raw)
+    a, i = _gates(p, u)
+    h, h_last = ops.rg_lru_scan(i * u.astype(jnp.float32), a, impl=impl)
+    out = dense(p["w_out"], h.astype(x.dtype) * gate)
+    if return_state:
+        return out, {"h": h_last, "conv_tail": tail.astype(jnp.float32)}
+    return out
+
+
+def rglru_empty_state(cfg: ModelConfig, batch: int):
+    rec = cfg.rec_dim or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, rec), jnp.float32),
+        "conv_tail": jnp.zeros((batch, cfg.conv_width - 1, rec), jnp.float32),
+    }
+
+
+def rglru_block_step(p, cfg: ModelConfig, x, state):
+    """x: (B, 1, d)."""
+    gate = jax.nn.gelu(dense(p["w_gate"], x), approximate=True)
+    u = dense(p["w_x"], x)
+    u, tail = _causal_conv(p["conv"], p["conv_b"], u,
+                           state["conv_tail"].astype(u.dtype))
+    a, i = _gates(p, u)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, 1.0)) * (i * u.astype(jnp.float32))
+    h = a[:, 0] * state["h"] + b[:, 0]
+    out = dense(p["w_out"], h[:, None, :].astype(x.dtype) * gate)
+    return out, {"h": h, "conv_tail": tail.astype(jnp.float32)}

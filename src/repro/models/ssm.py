@@ -1,0 +1,204 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+The mLSTM sequence path runs through the chunkwise Pallas kernel
+(kernels/mlstm.py, XLA oracle in interpret-free mode); sLSTM is a
+sequential ``lax.scan`` (it has true recurrent weight connections and no
+parallel form).  Both expose single-step functions for decode, whose
+carried states are fixed-schema pytrees — relocatable collection entries
+for the serving balancer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import dense, dense_init, geglu, geglu_init, rmsnorm, rmsnorm_init
+
+__all__ = ["mlstm_block_init", "mlstm_block", "mlstm_block_step",
+           "slstm_block_init", "slstm_block", "slstm_block_step",
+           "mlstm_empty_state", "slstm_empty_state"]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+def mlstm_block_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    inner = int(cfg.proj_factor * d)
+    H = cfg.rec_heads or 4
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": dense_init(ks[0], d, 2 * inner, dtype),
+        "w_down": dense_init(ks[1], inner, d, dtype),
+        "wq": dense_init(ks[2], inner, inner, dtype),
+        "wk": dense_init(ks[3], inner, inner, dtype),
+        "wv": dense_init(ks[4], inner, inner, dtype),
+        "w_igate": dense_init(ks[5], inner, H, dtype, bias=True),
+        "w_fgate": dense_init(ks[6], inner, H, dtype, bias=True),
+        "out_norm": rmsnorm_init(inner, dtype),
+    }
+
+
+def _split_heads(x, H):
+    B, S, inner = x.shape
+    return x.reshape(B, S, H, inner // H).transpose(0, 2, 1, 3) \
+            .reshape(B * H, S, inner // H)
+
+
+def _merge_heads(x, B, H):
+    BH, S, hd = x.shape
+    return x.reshape(B, H, S, hd).transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+
+
+def mlstm_block(p, cfg: ModelConfig, x, *, impl=None, return_state=False):
+    """x: (B, S, d) → (B, S, d) [, final mLSTM state for decode]."""
+    B, S, d = x.shape
+    H = cfg.rec_heads or 4
+    inner = int(cfg.proj_factor * d)
+    up = dense(p["w_up"], x)
+    xin, zgate = up[..., :inner], up[..., inner:]
+    q = _split_heads(dense(p["wq"], xin), H)
+    k = _split_heads(dense(p["wk"], xin), H)
+    v = _split_heads(dense(p["wv"], xin), H)
+    ig = dense(p["w_igate"], xin)   # (B, S, H) pre-activations
+    fg = dense(p["w_fgate"], xin)
+    ig = ig.transpose(0, 2, 1).reshape(B * H, S)
+    fg = fg.transpose(0, 2, 1).reshape(B * H, S)
+    h, (C, n, m) = ops.mlstm(q, k, v, ig, fg, impl=impl, return_state=True)
+    h = _merge_heads(h, B, H)
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    out = dense(p["w_down"], h * jax.nn.silu(zgate))
+    if return_state:
+        return out, {"C": C, "n": n, "m": m}
+    return out
+
+
+def mlstm_empty_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    H = cfg.rec_heads or 4
+    inner = int(cfg.proj_factor * d)
+    hd = inner // H
+    return {
+        "C": jnp.zeros((batch * H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch * H, hd), jnp.float32),
+        "m": jnp.full((batch * H,), -jnp.inf, jnp.float32),
+    }
+
+
+def mlstm_block_step(p, cfg: ModelConfig, x, state):
+    """Single-token decode. x: (B, 1, d); state from mlstm_empty_state."""
+    B, _, d = x.shape
+    H = cfg.rec_heads or 4
+    inner = int(cfg.proj_factor * d)
+    hd = inner // H
+    up = dense(p["w_up"], x)
+    xin, zgate = up[..., :inner], up[..., inner:]
+    q = dense(p["wq"], xin).reshape(B * H, hd).astype(jnp.float32) / math.sqrt(hd)
+    k = dense(p["wk"], xin).reshape(B * H, hd).astype(jnp.float32) / math.sqrt(hd)
+    v = dense(p["wv"], xin).reshape(B * H, hd).astype(jnp.float32)
+    ig = dense(p["w_igate"], xin).reshape(B * H).astype(jnp.float32)
+    fg = dense(p["w_fgate"], xin).reshape(B * H).astype(jnp.float32)
+
+    C, n, m = state["C"], state["n"], state["m"]
+    logf = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(logf + m, ig)
+    fdec = jnp.exp(logf + m - m_new)
+    fdec = jnp.where(jnp.isfinite(fdec), fdec, 0.0)
+    iamp = jnp.exp(ig - m_new)
+    C = fdec[:, None, None] * C + iamp[:, None, None] * (k[:, :, None] * v[:, None, :])
+    n = fdec[:, None] * n + iamp[:, None] * k
+    denom = jnp.maximum(jnp.abs(jnp.sum(n * q, axis=-1)), 1.0)
+    h = jnp.einsum("bkv,bk->bv", C, q) / denom[:, None]
+    h = h.reshape(B, 1, inner).astype(x.dtype)
+    h = rmsnorm(p["out_norm"], h, cfg.norm_eps)
+    out = dense(p["w_down"], h * jax.nn.silu(zgate))
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, true recurrent connections)
+# ---------------------------------------------------------------------------
+def slstm_block_init(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    H = cfg.rec_heads or 4
+    hd = d // H
+    ks = jax.random.split(key, 10)
+    p = {"in_norm": rmsnorm_init(d, dtype)}
+    for i, g in enumerate(("i", "f", "z", "o")):
+        p[f"w_{g}"] = dense_init(ks[i], d, d, dtype, bias=True)
+        # recurrent block-diagonal weights: (H, hd, hd)
+        p[f"r_{g}"] = (jax.random.normal(ks[4 + i], (H, hd, hd), jnp.float32)
+                       / math.sqrt(hd)).astype(dtype)
+    dff = max(-(-int(d * 4 / 3) // 256) * 256, 8) if d >= 256 else max(int(d * 4 / 3), 8)
+    p["ffn"] = geglu_init(ks[8], d, dff, dtype)
+    p["ffn_norm"] = rmsnorm_init(d, dtype)
+    return p
+
+
+def slstm_empty_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -jnp.inf, jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+    }
+
+
+def _slstm_cell(p, cfg: ModelConfig, xt, state):
+    """One sLSTM step. xt: (B, d) already normed."""
+    B, d = xt.shape
+    H = cfg.rec_heads or 4
+    hd = d // H
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    hh = h.reshape(B, H, hd).astype(jnp.float32)
+
+    def rec(g):
+        r = p[f"r_{g}"].astype(jnp.float32)
+        return jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, d)
+
+    it = dense(p["w_i"], xt).astype(jnp.float32) + rec("i")
+    ft = dense(p["w_f"], xt).astype(jnp.float32) + rec("f")
+    zt = jnp.tanh(dense(p["w_z"], xt).astype(jnp.float32) + rec("z"))
+    ot = jax.nn.sigmoid(dense(p["w_o"], xt).astype(jnp.float32) + rec("o"))
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + m, it)
+    fdec = jnp.exp(logf + m - m_new)
+    fdec = jnp.where(jnp.isfinite(fdec), fdec, 0.0)
+    iamp = jnp.exp(it - m_new)
+    c = fdec * c + iamp * zt
+    n = fdec * n + iamp
+    h_new = ot * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "m": m_new, "h": h_new}
+
+
+def slstm_block(p, cfg: ModelConfig, x, *, return_state=False):
+    """x: (B, S, d) → (B, S, d) via sequential scan."""
+    B, S, d = x.shape
+    xn = rmsnorm(p["in_norm"], x, cfg.norm_eps)
+    state0 = slstm_empty_state(cfg, B)
+
+    def step(state, xt):
+        new = _slstm_cell(p, cfg, xt, state)
+        return new, new["h"]
+
+    final, hs = jax.lax.scan(step, state0, xn.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2).astype(x.dtype)
+    y = x + h
+    out = y + geglu(p["ffn"], rmsnorm(p["ffn_norm"], y, cfg.norm_eps))
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_block_step(p, cfg: ModelConfig, x, state):
+    """x: (B, 1, d)."""
+    xn = rmsnorm(p["in_norm"], x, cfg.norm_eps)[:, 0]
+    new = _slstm_cell(p, cfg, xn, state)
+    y = x + new["h"][:, None, :].astype(x.dtype)
+    out = y + geglu(p["ffn"], rmsnorm(p["ffn_norm"], y, cfg.norm_eps))
+    return out, new

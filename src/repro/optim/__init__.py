@@ -1,0 +1,7 @@
+"""Optimizers + distributed-optimization tricks."""
+from .adamw import (AdamWConfig, adamw_init, adamw_update, cosine_lr,
+                    global_norm, opt_partition_specs)
+from .compress import compressed_psum, ef_init
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_lr",
+           "global_norm", "opt_partition_specs", "compressed_psum", "ef_init"]

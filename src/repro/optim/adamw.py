@@ -1,0 +1,198 @@
+"""AdamW with global-norm clipping and ZeRO-1 optimizer-state sharding.
+
+ZeRO-1 here is purely a *sharding-spec* decision: the Adam moments are
+partitioned over the data axis (the first replicated dim of each large
+leaf), so the weight update math runs shard-wise and GSPMD materializes
+the reduce-scatter(grads) → shard-update → all-gather(params) schedule
+— the paper's CachableChunkedList share/allreduce pattern applied to
+optimizer state.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "opt_partition_specs", "global_norm", "cosine_lr"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+    # "float32" | "bfloat16" | "int8" (blockwise-quantized moments; the
+    # 671B config needs this to fit HBM — see EXPERIMENTS.md §Dry-run)
+    moments_dtype: str = "float32"
+    q_block: int = 256
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 moment quantization (bitsandbytes-style)
+# ---------------------------------------------------------------------------
+def _q8_encode(x: jnp.ndarray, block: int):
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-20)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)[:, 0]}
+
+
+def _q8_decode(enc, shape, block: int):
+    vals = enc["q"].astype(jnp.float32) * enc["scale"][:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return vals.reshape(-1)[:n].reshape(shape)
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def adamw_init(params, cfg: AdamWConfig | None = None):
+    cfg = cfg or AdamWConfig()
+    if cfg.moments_dtype == "int8":
+        enc = lambda p: _q8_encode(jnp.zeros_like(p, jnp.float32), cfg.q_block)
+        return {
+            "m": jax.tree_util.tree_map(enc, params),
+            # v is stored in sqrt-space (halves its dynamic range, the
+            # standard 8-bit-Adam construction)
+            "v": jax.tree_util.tree_map(enc, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+    mdt = jnp.dtype(cfg.moments_dtype)
+    zeros = lambda p: jnp.zeros_like(p, dtype=mdt)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig,
+                 lr: Optional[jnp.ndarray] = None):
+    count = state["count"] + 1
+    if lr is None:
+        lr = cosine_lr(cfg, count)
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-12))
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    q8 = cfg.moments_dtype == "int8"
+    mdt = jnp.float32 if q8 else jnp.dtype(cfg.moments_dtype)
+
+    def upd(g, m, v, p):
+        if q8:
+            m = _q8_decode(m, p.shape, cfg.q_block)
+            v = _q8_decode(v, p.shape, cfg.q_block) ** 2  # sqrt-space store
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m / b1c
+        vhat = v / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        if q8:
+            return new_p, _q8_encode(m, cfg.q_block), _q8_encode(
+                jnp.sqrt(v), cfg.q_block)
+        return new_p, m.astype(mdt), v.astype(mdt)
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    is_enc = lambda x: isinstance(x, dict) and set(x) == {"q", "scale"}
+    flat_m = tdef.flatten_up_to(state["m"]) if not q8 else \
+        jax.tree_util.tree_leaves(state["m"], is_leaf=is_enc)
+    flat_v = tdef.flatten_up_to(state["v"]) if not q8 else \
+        jax.tree_util.tree_leaves(state["v"], is_leaf=is_enc)
+    flat_p = tdef.flatten_up_to(params)
+    new_p, new_m, new_v = [], [], []
+    for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p):
+        np_, nm, nv = upd(g, m, v, p)
+        new_p.append(np_)
+        new_m.append(nm)
+        new_v.append(nv)
+    return (tdef.unflatten(new_p),
+            {"m": tdef.unflatten(new_m), "v": tdef.unflatten(new_v),
+             "count": count},
+            {"grad_norm": gn, "lr": lr})
+
+
+def opt_partition_specs(param_specs, params_shape, par, *, zero1: bool = True,
+                        opt_cfg: "AdamWConfig | None" = None):
+    """Moment shardings: param spec + (ZeRO-1) data-axis sharding on the
+    first dim that is unsharded and divisible by the data-axis size.
+    int8 moments shard their block dim the same way."""
+    opt_cfg = opt_cfg or AdamWConfig()
+    q8 = opt_cfg.moments_dtype == "int8"
+    if par.mesh is None:
+        unit = (lambda s, sh: {"q": P(), "scale": P()}) if q8 else \
+            (lambda s, sh: s)
+        m_specs = jax.tree_util.tree_map(unit, param_specs, params_shape)
+        return {"m": m_specs, "v": m_specs, "count": P()}
+    data_axis = par.batch_axes[-1]
+    n_data = par.mesh.shape[data_axis]
+
+    def shard_leaf(spec: P, shp):
+        shape = getattr(shp, "shape", shp)
+        if q8:
+            n = 1
+            for s in shape:
+                n *= s
+            nblocks = -(-n // opt_cfg.q_block)
+            all_axes = tuple(par.batch_axes) + (par.model_axis,)
+            n_all = 1
+            for a in all_axes:
+                n_all *= par.mesh.shape[a]
+            if zero1 and nblocks % n_all == 0 and nblocks >= n_all:
+                return {"q": P(all_axes, None), "scale": P(all_axes)}
+            if zero1 and nblocks % n_data == 0 and nblocks >= n_data:
+                return {"q": P(data_axis, None), "scale": P(data_axis)}
+            return {"q": P(), "scale": P()}
+        if not zero1 or len(shape) == 0:
+            return spec
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        used = set()
+        for e in entries:
+            if e is None:
+                continue
+            used.update(e if isinstance(e, tuple) else (e,))
+        if data_axis in used:
+            return spec  # fsdp already shards this leaf over data
+        for i, (e, s) in enumerate(zip(entries, shape)):
+            if e is None and s % n_data == 0 and s >= n_data:
+                entries[i] = data_axis
+                return P(*entries)
+        return spec
+
+    m_specs = jax.tree_util.tree_map(shard_leaf, param_specs, params_shape)
+    return {"m": m_specs, "v": m_specs, "count": P()}

@@ -1,0 +1,1 @@
+from .fault_tolerance import *  # noqa: F401,F403

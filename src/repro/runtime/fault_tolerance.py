@@ -1,0 +1,167 @@
+"""Fault tolerance + straggler mitigation driver.
+
+The cluster-side behaviors a 1000-node deployment needs, built on the
+collection substrate and testable on one host:
+
+* **Heartbeats / failure detection** — every place reports a heartbeat
+  each step; a place silent for ``timeout_steps`` is declared dead.
+* **Checkpoint-restart** — on failure the driver restores the latest
+  committed checkpoint and continues on the surviving (or replacement)
+  world; the elastic N→M restore is the relocation engine
+  (checkpoint/manager.py).
+* **Straggler mitigation** — per-place step times feed the paper's
+  level-extremes (or proportional) balancer; decided moves apply to the
+  data shards between steps, overlapped with the optimizer update
+  (paper §4.5's async relocation next to ``handleOrders``).
+* **Elastic scaling** — grow/shrink events rebuild the PlaceGroup and
+  re-partition tracked collections with one collective relocation.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core import (CollectiveMoveManager, LevelExtremes, LoadBalancer,
+                    LongRange, PlaceGroup, Proportional, RangeDistribution)
+
+__all__ = ["HeartbeatMonitor", "StragglerMitigator", "ElasticWorld",
+           "FaultTolerantDriver"]
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_places: int, timeout_steps: int = 3):
+        self.n = n_places
+        self.timeout = timeout_steps
+        self.last_seen = np.zeros(n_places, np.int64)
+        self.step = 0
+        self.dead: set[int] = set()
+
+    def beat(self, place: int) -> None:
+        self.last_seen[place] = self.step
+
+    def tick(self) -> list[int]:
+        """Advance one step; return newly-dead places."""
+        self.step += 1
+        newly = [p for p in range(self.n)
+                 if p not in self.dead
+                 and self.step - self.last_seen[p] > self.timeout]
+        self.dead.update(newly)
+        return newly
+
+    def alive(self) -> list[int]:
+        return [p for p in range(self.n) if p not in self.dead]
+
+
+class StragglerMitigator:
+    """Paper §4.5 applied to training data shards."""
+
+    def __init__(self, n_places: int, *, period: int = 5,
+                 strategy: str = "level_extremes", ema: float = 0.3):
+        strat = (LevelExtremes() if strategy == "level_extremes"
+                 else Proportional(damping=0.7))
+        self.balancer = LoadBalancer(n_places, strategy=strat, period=period,
+                                     ema=ema)
+        self.moves_applied = 0
+
+    def observe_and_maybe_rebalance(self, step_times: np.ndarray,
+                                    shards) -> bool:
+        """shards: data.pipeline.ShardedBatches. Returns True if moved."""
+        self.balancer.record_all(step_times)
+        decision = self.balancer.step(shards.loads())
+        if decision and decision.moves:
+            shards.apply_balance(decision)
+            self.moves_applied += decision.total_moved
+            return True
+        return False
+
+
+class ElasticWorld:
+    """Grow/shrink the place group; re-partition tracked collections."""
+
+    def __init__(self, group: PlaceGroup):
+        self.group = group
+        self.events: list[tuple[str, int]] = []
+
+    def resize(self, new_size: int, collections) -> PlaceGroup:
+        old = self.group
+        new_group = PlaceGroup(new_size)
+        for col in collections:
+            total = col.global_size()
+            target = RangeDistribution.block(total, new_size)
+            # one collective relocation moves every entry to its new owner
+            mm = CollectiveMoveManager(old if old.size() >= new_size
+                                       else new_group)
+            # host model: rebuild by ranges
+            col.group = new_group
+            all_rows = []
+            for p in old.members:
+                if p in col._handles:
+                    h = col._handles.pop(p)
+                    for r in sorted(h.chunks, key=lambda r: r.start):
+                        all_rows.append((r, h.chunks[r]))
+            all_rows.sort(key=lambda t: t[0].start)
+            if all_rows:
+                rows = np.concatenate([a for _, a in all_rows], axis=0)
+                offs = 0
+                for p in new_group.members:
+                    for r in target.ranges_of(p):
+                        col.add_chunk(p, r, rows[r.start:r.end])
+            col.update_dist()
+        self.events.append(("resize", new_size))
+        self.group = new_group
+        return new_group
+
+
+@dataclass
+class FaultTolerantDriver:
+    """Orchestrates: step → heartbeat → (failure? restore) → (straggle?
+    rebalance) → periodic checkpoint.  The 'cluster' is simulated by the
+    caller flagging failures/slowdowns; everything else is real code
+    shared with the launchers."""
+
+    n_places: int
+    ckpt_manager: object
+    ckpt_period: int = 20
+    monitor: HeartbeatMonitor = None
+    mitigator: StragglerMitigator = None
+    restarts: int = 0
+    step: int = 0
+
+    def __post_init__(self):
+        if self.monitor is None:
+            self.monitor = HeartbeatMonitor(self.n_places)
+        if self.mitigator is None:
+            self.mitigator = StragglerMitigator(self.n_places)
+
+    def run_step(self, state, step_fn, shards, *, step_times=None,
+                 failed_places=()):
+        """One resilient step. Returns (state, info)."""
+        info = {"restored": False, "rebalanced": False}
+        for p in range(self.n_places):
+            if p not in failed_places:
+                self.monitor.beat(p)
+        dead = self.monitor.tick()
+        if dead:
+            # checkpoint-restart: reload last committed state and retry
+            state, manifest = self.ckpt_manager.restore(state)
+            self.restarts += 1
+            self.step = manifest["step"]
+            info["restored"] = True
+            info["dead"] = dead
+            # survivors re-own the dead places' data (elastic relocation)
+            self.monitor.dead.clear()
+            self.monitor.last_seen[:] = self.monitor.step
+            return state, info
+
+        state = step_fn(state)
+        self.step += 1
+        if step_times is not None and shards is not None:
+            info["rebalanced"] = self.mitigator.observe_and_maybe_rebalance(
+                np.asarray(step_times), shards)
+        if self.step % self.ckpt_period == 0:
+            self.ckpt_manager.save(self.step, state)
+            info["checkpointed"] = True
+        return state, info

@@ -1,0 +1,99 @@
+"""Serving-side KV/state management as relocatable collections.
+
+Sequences in flight are entries of a tracked ``DistArray`` keyed by
+sequence id (the paper's agents); their cache pages / recurrent states
+are the entry payloads.  Continuous batching admits new sequences into
+free slots, and the level-extremes balancer relocates sequences between
+replicas when per-replica decode times drift — ``update_dist`` keeps the
+front-end router's table consistent (paper §4.4/§4.6: dispatch to moved
+agents keeps working).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core import (CollectiveMoveManager, DistIdMap, LevelExtremes,
+                    LoadBalancer, LongRange, PlaceGroup, RangeDistribution)
+
+__all__ = ["ServingPool", "Sequence"]
+
+
+@dataclass
+class Sequence:
+    seq_id: int
+    prompt_len: int
+    generated: int = 0
+    max_new: int = 64
+    # fixed-schema payload (KV pages / recurrent states) lives device-side;
+    # host tracks metadata + an opaque handle
+    state_ref: Optional[object] = None
+
+    @property
+    def done(self) -> bool:
+        return self.generated >= self.max_new
+
+
+class ServingPool:
+    """Continuous-batching pool across replicas with relocation."""
+
+    def __init__(self, group: PlaceGroup, *, slots_per_replica: int,
+                 lb_period: int = 8):
+        self.group = group
+        self.slots = slots_per_replica
+        self.seqs = DistIdMap(group)
+        self.balancer = LoadBalancer(group.size(),
+                                     strategy=LevelExtremes(), period=lb_period)
+        self.next_id = 0
+        self.completed: list[int] = []
+        self.relocations = 0
+
+    # -- admission ------------------------------------------------------
+    def admit(self, prompt_len: int, max_new: int = 64) -> int | None:
+        loads = [self.seqs.local_size(p) for p in self.group.members]
+        p = int(np.argmin(loads))
+        if loads[p] >= self.slots:
+            return None
+        sid = self.next_id
+        self.next_id += 1
+        self.seqs.put(p, sid, Sequence(sid, prompt_len, max_new=max_new))
+        return sid
+
+    def replica_of(self, sid: int) -> int:
+        return self.seqs.get_distribution().owner_of(sid)
+
+    def loads(self) -> np.ndarray:
+        return np.array([self.seqs.local_size(p) for p in self.group.members])
+
+    # -- decode round ---------------------------------------------------
+    def step(self, decode_times: np.ndarray) -> None:
+        """One decode round: advance every live sequence, retire finished
+        ones, and (periodically) rebalance using measured replica times —
+        relocation happens between rounds, overlapped with the next
+        round's compute on unaffected replicas (paper §4.5)."""
+        for p in self.group.members:
+            for sid in list(self.seqs.keys(p)):
+                s = self.seqs.get(p, sid)
+                s.generated += 1
+                if s.done:
+                    h = self.seqs.handle(p)
+                    del h[sid]
+                    self.completed.append(sid)
+        self.balancer.record_all(decode_times)
+        decision = self.balancer.step(self.loads())
+        if decision and decision.moves:
+            mm = CollectiveMoveManager(self.group)
+            for src, dest, count in decision.moves:
+                sids = self.seqs.keys(src)[:count]
+                moved = set(sids)
+                if moved:
+                    self.seqs.move_at_sync(
+                        src, lambda k: dest if k in moved else src, mm)
+            mm.sync()
+            self.relocations += mm.last_payload_bytes
+            self.seqs.update_dist()
+
+    def live(self) -> int:
+        return self.seqs.global_size()

@@ -1,0 +1,22 @@
+"""Assigned input-shape cells (shared by configs, zoo, launch)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+__all__ = ["ShapeCell", "SHAPES"]
+
+
+@dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = (
+    ShapeCell("train_4k", 4096, 256, "train"),
+    ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    ShapeCell("decode_32k", 32768, 128, "decode"),
+    ShapeCell("long_500k", 524288, 1, "decode"),
+)

@@ -1,0 +1,4 @@
+"""Training loop substrate."""
+from .step import batch_sharding, build_train_step, train_state_shardings
+
+__all__ = ["batch_sharding", "build_train_step", "train_state_shardings"]

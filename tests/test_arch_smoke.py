@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes + no NaNs (assignment requirement), plus a
+train-step update and a decode step per family."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import Parallel, zoo
+from repro.models import transformer as T
+from repro.optim.adamw import AdamWConfig, adamw_init
+from repro.train.step import build_train_step
+
+PAR = Parallel(mesh=None)
+
+
+def tiny_batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32),
+        "labels": rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32),
+    }
+    if cfg.is_encoder_decoder:
+        batch["enc_frames"] = rng.normal(size=(B, S, cfg.d_model)).astype(np.float32)
+        dec = min(cfg.max_target_len, S)
+        batch["tokens"] = batch["tokens"][:, :dec]
+        batch["labels"] = batch["labels"][:, :dec]
+    if cfg.mrope_sections:
+        batch["mrope_positions"] = np.tile(
+            np.arange(S, dtype=np.int32), (3, B, 1))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_loss_finite(arch):
+    cfg = get_config(arch).reduced()
+    params = zoo.init_params(cfg, 0)
+    loss, metrics = zoo.train_loss_fn(cfg, PAR)(params, tiny_batch(cfg))
+    assert np.isfinite(float(loss)), f"{arch} loss not finite"
+    assert float(loss) > 0
+    assert np.isfinite(float(metrics["lm_loss"]))
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "deepseek_v2_lite_16b",
+                                  "xlstm_350m", "recurrentgemma_2b",
+                                  "whisper_small"])
+def test_train_step_updates_params(arch):
+    cfg = get_config(arch).reduced()
+    params = zoo.init_params(cfg, 0)
+    opt = AdamWConfig(lr=1e-3, warmup_steps=0)
+    step, _, _ = build_train_step(cfg, PAR, opt)
+    opt_state = adamw_init(params, opt)
+    batch = tiny_batch(cfg)
+    p0 = jax.tree_util.tree_leaves(params)[0].copy()
+    losses = []
+    for i in range(3):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        assert np.isfinite(losses[-1])
+    assert not np.allclose(np.asarray(jax.tree_util.tree_leaves(params)[0]),
+                           np.asarray(p0))
+    # same batch thrice → loss should drop
+    assert losses[-1] < losses[0]
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "gemma2_27b",
+                                  "deepseek_v2_lite_16b", "xlstm_350m",
+                                  "recurrentgemma_2b", "gemma3_12b"])
+def test_decode_matches_prefill_logits(arch):
+    """Sequential decode (cache path) == parallel forward logits."""
+    cfg = get_config(arch).reduced()
+    params = zoo.init_params(cfg, 0)
+    B, S = 2, 16
+    rng = np.random.default_rng(1)
+    tokens = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+
+    state, logits_seq = T.prefill(params, cfg, PAR, tokens, s_cache=32)
+    # parallel forward logits at the last position
+    batch = {"tokens": tokens}
+    pf_state, last_parallel = T.prefill_forward(params, cfg, PAR, batch,
+                                                s_cache=32)
+    last_seq = np.asarray(logits_seq[:, -1, :], np.float32)
+    last_par = np.asarray(last_parallel, np.float32)
+    np.testing.assert_allclose(last_seq, last_par, atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_1_5b", "recurrentgemma_2b",
+                                  "deepseek_v2_lite_16b"])
+def test_prefill_state_continues_decode(arch):
+    """decode_step from prefill_forward state == decode_step from the
+    sequential prefill state (cache equivalence)."""
+    cfg = get_config(arch).reduced()
+    params = zoo.init_params(cfg, 0)
+    B, S = 2, 12
+    rng = np.random.default_rng(2)
+    tokens = rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    st_seq, _ = T.prefill(params, cfg, PAR, tokens, s_cache=24)
+    st_par, _ = T.prefill_forward(params, cfg, PAR, {"tokens": tokens},
+                                  s_cache=24)
+    nxt = rng.integers(0, cfg.vocab_size, (B, 1)).astype(np.int32)
+    _, l1 = T.decode_step(params, cfg, PAR, st_seq, nxt)
+    _, l2 = T.decode_step(params, cfg, PAR, st_par, nxt)
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32), atol=3e-2,
+                               rtol=3e-2)
+
+
+def test_mtp_loss_present():
+    cfg = get_config("deepseek_v3_671b").reduced()
+    params = zoo.init_params(cfg, 0)
+    loss, metrics = zoo.train_loss_fn(cfg, PAR)(params, tiny_batch(cfg))
+    assert "mtp_loss" in metrics and np.isfinite(float(metrics["mtp_loss"]))
+
+
+def test_moe_aux_loss_nonzero():
+    cfg = get_config("deepseek_v2_lite_16b").reduced()
+    params = zoo.init_params(cfg, 0)
+    loss, metrics = zoo.train_loss_fn(cfg, PAR)(params, tiny_batch(cfg))
+    assert float(metrics["moe_aux"]) > 0
+
+
+def test_param_counts_match_actual():
+    """Analytic param accounting (roofline MODEL_FLOPS) ≈ actual tree."""
+    for arch in ["qwen2_1_5b", "gemma2_27b", "deepseek_v2_lite_16b"]:
+        cfg = get_config(arch).reduced()
+        params = zoo.init_params(cfg, 0)
+        actual = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        est = cfg.param_counts()["total"]
+        assert abs(actual - est) / actual < 0.25, (arch, actual, est)
+
+
+def test_full_config_dims_are_exact():
+    """The full (non-reduced) configs match the assigned pool specs."""
+    spec = {
+        "qwen2_1_5b": (28, 1536, 12, 2, 8960, 151936),
+        "gemma2_27b": (46, 4608, 32, 16, 36864, 256000),
+        "gemma3_12b": (48, 3840, 16, 8, 15360, 262144),
+        "phi4_mini_3_8b": (32, 3072, 24, 8, 8192, 200064),
+        "deepseek_v2_lite_16b": (27, 2048, 16, 16, 10944, 102400),
+        "deepseek_v3_671b": (61, 7168, 128, 128, 18432, 129280),
+        "qwen2_vl_2b": (28, 1536, 12, 2, 8960, 151936),
+        "whisper_small": (12, 768, 12, 12, 3072, 51865),
+        "xlstm_350m": (24, 1024, 4, 4, 0, 50304),
+        "recurrentgemma_2b": (26, 2560, 10, 1, 7680, 256000),
+    }
+    for arch, (L, d, H, Hkv, dff, V) in spec.items():
+        cfg = get_config(arch)
+        assert cfg.n_layers == L and cfg.d_model == d
+        assert cfg.n_heads == H and cfg.n_kv_heads == Hkv
+        assert cfg.d_ff == dff and cfg.vocab_size == V
+    # family-specific details
+    assert get_config("deepseek_v3_671b").n_experts == 256
+    assert get_config("deepseek_v3_671b").top_k == 8
+    assert get_config("deepseek_v3_671b").mtp_depth == 1
+    assert get_config("deepseek_v2_lite_16b").top_k == 6
+    assert get_config("deepseek_v2_lite_16b").kv_lora_rank == 512
+    assert get_config("gemma2_27b").attn_softcap == 50.0
+    assert get_config("recurrentgemma_2b").pattern[0].mixer == "rec"
+    assert get_config("recurrentgemma_2b").pattern[2].mixer == "attn_local"

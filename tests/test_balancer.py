@@ -1,0 +1,114 @@
+"""Load-balancer semantics: paper §4.5 / §6.3 claims."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BalanceDecision, LevelExtremes, LoadBalancer,
+                        Proportional)
+
+
+def simulate(strategy, speeds, n_entries=1200, iters=200, period=5,
+             per_entry_noise=0.0, seed=0):
+    """Synthetic cluster: place p processes an entry in 1/speeds[p] time.
+    Returns the history of per-iteration makespans and final loads."""
+    rng = np.random.default_rng(seed)
+    n = len(speeds)
+    loads = np.full(n, n_entries // n, dtype=np.int64)
+    loads[0] += n_entries - loads.sum()
+    lb = LoadBalancer(n, strategy=strategy, period=period)
+    makespans = []
+    for it in range(iters):
+        t = loads / np.asarray(speeds)
+        if per_entry_noise:
+            t = t * (1 + per_entry_noise * rng.standard_normal(n))
+        makespans.append(t.max())
+        lb.record_all(np.maximum(t, 1e-9))
+        decision = lb.step(loads)
+        if decision:
+            for s, d, k in decision.moves:
+                k = min(k, loads[s] - 1)
+                loads[s] -= k
+                loads[d] += k
+    return np.asarray(makespans), loads
+
+
+class TestLevelExtremes:
+    def test_no_move_when_balanced(self):
+        """Paper: 'no overhead when no balancing required' (Config A)."""
+        lb = LoadBalancer(4, strategy=LevelExtremes(), period=1)
+        lb.record_all([1.0, 1.0, 1.01, 0.99])
+        d = lb.step([100] * 4)
+        assert d.moves == ()
+
+    def test_moves_from_slowest_to_fastest(self):
+        lb = LoadBalancer(4, strategy=LevelExtremes(), period=1)
+        lb.record_all([4.0, 1.0, 2.0, 1.5])
+        d = lb.step([100] * 4)
+        assert len(d.moves) == 1
+        s, dst, k = d.moves[0]
+        assert s == 0 and dst == 1 and 1 <= k < 100
+
+    def test_converges_on_uneven_cluster(self):
+        """Paper Fig 8a: stable distribution on piccolo+harp cluster."""
+        speeds = [1.0, 1.0, 1.0, 3.0]  # 'harp' is 3x faster
+        makespans, loads = simulate(LevelExtremes(), speeds)
+        # final time within 15% of optimal; harp holds ~3x of a piccolo
+        opt = 1200 / sum(speeds)
+        assert makespans[-1] < opt * 1.15
+        assert loads[3] > 2.0 * loads[0]
+
+    def test_adapts_to_moving_disturbance(self):
+        """Paper Fig 8b: the Disturb program moves between hosts."""
+        n = 4
+        loads = np.full(n, 300, dtype=np.int64)
+        lb = LoadBalancer(n, strategy=LevelExtremes(), period=5)
+        history = []
+        for it in range(300):
+            speeds = np.ones(n)
+            speeds[(it // 100) % n] = 0.4     # disturbed host slows down
+            t = loads / speeds
+            lb.record_all(t)
+            d = lb.step(loads)
+            if d:
+                for s, dst, k in d.moves:
+                    k = min(k, loads[s] - 1)
+                    loads[s] -= k
+                    loads[dst] += k
+            history.append(loads.copy())
+        # during window 2 (disturb on host 1), host 1 sheds entries
+        assert history[195][1] < 280
+        # and earlier-disturbed host 0 has recovered entries by then
+        assert history[195][0] > history[95][0]
+
+    def test_zero_overhead_accounting(self):
+        ms_lb, _ = simulate(LevelExtremes(), [1, 1, 1, 1])
+        ms_static, _ = simulate(LevelExtremes(min_gap=10.0), [1, 1, 1, 1])
+        assert abs(ms_lb.mean() - ms_static.mean()) / ms_static.mean() < 0.01
+
+
+class TestProportional:
+    def test_one_shot_balance(self):
+        lb = LoadBalancer(4, strategy=Proportional(), period=1)
+        lb.record_all([4.0, 1.0, 1.0, 1.0])
+        d = lb.step([400, 400, 400, 400])
+        assert d.total_moved > 100
+        # all moves come from the slow place
+        assert all(m[0] == 0 for m in d.moves)
+
+    def test_faster_convergence_than_level_extremes(self):
+        speeds = [0.5, 1.0, 2.0, 4.0]
+        ms_le, _ = simulate(LevelExtremes(), speeds, iters=60)
+        ms_pr, _ = simulate(Proportional(damping=0.8), speeds, iters=60)
+        # proportional reaches near-optimal makespan sooner
+        opt = 1200 / sum(speeds)
+        t_le = np.argmax(ms_le < opt * 1.2) or len(ms_le)
+        t_pr = np.argmax(ms_pr < opt * 1.2) or len(ms_pr)
+        assert t_pr <= t_le
+
+
+@settings(max_examples=30, deadline=None)
+@given(speeds=st.lists(st.floats(0.2, 5.0), min_size=2, max_size=8))
+def test_property_balancing_never_diverges(speeds):
+    """Makespan after balancing ≤ initial makespan × 1.05 for any cluster."""
+    ms, loads = simulate(LevelExtremes(), speeds, n_entries=400, iters=120)
+    assert ms[-1] <= ms[0] * 1.05
+    assert loads.sum() == 400 and (loads >= 1).all()

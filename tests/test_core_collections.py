@@ -1,0 +1,261 @@
+"""Core relocatable-collection semantics (paper §3–§5)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    Accumulator, CachableArray, CachableChunkedList, CollectiveMoveManager,
+    DistArray, DistBag, DistMap, DistMultiMap, LongRange, PlaceGroup,
+    RangeDistribution, RangedListProduct,
+)
+
+
+def make_col(n_places=4, n=120, width=3, track=True):
+    g = PlaceGroup(n_places)
+    col = DistArray(g, track=track)
+    for p, r in enumerate(LongRange(0, n).split(n_places)):
+        if r.size:
+            col.add_chunk(p, r, np.arange(r.start, r.end)[:, None]
+                          * np.ones((1, width)))
+    return g, col
+
+
+class TestLongRange:
+    def test_split_covers(self):
+        parts = LongRange(0, 103).split(7)
+        assert sum(p.size for p in parts) == 103
+        assert parts[0].start == 0 and parts[-1].end == 103
+
+    def test_intersection(self):
+        assert LongRange(0, 10).intersection(LongRange(5, 20)) == LongRange(5, 10)
+        assert LongRange(0, 5).intersection(LongRange(5, 9)) is None
+
+
+class TestRangeDistribution:
+    def test_block_and_owner(self):
+        d = RangeDistribution.block(100, 4)
+        assert d.owner_of(0) == 0 and d.owner_of(99) == 3
+        assert d.loads(4).tolist() == [25, 25, 25, 25]
+
+    def test_assign_splits(self):
+        d = RangeDistribution.block(100, 2)
+        d.assign(LongRange(40, 60), 1)
+        assert d.owner_of(39) == 0 and d.owner_of(40) == 1
+        assert d.owner_of(59) == 1 and d.owner_of(60) == 1
+        assert d.total == 100
+
+    def test_delta_roundtrip(self):
+        d = RangeDistribution.block(50, 2)
+        v0 = d.version
+        peer = d.copy()
+        d.assign(LongRange(10, 20), 1)
+        d.assign(LongRange(45, 50), 0)
+        peer.apply_delta(d.delta_since(v0))
+        assert peer == d
+
+    def test_device_lookup(self):
+        d = RangeDistribution.block(64, 4)
+        idx = np.array([0, 15, 16, 63])
+        np.testing.assert_array_equal(np.asarray(d.lookup(idx)), [0, 0, 1, 3])
+        assert int(d.lookup(np.array([200]))[0]) == -1
+
+
+class TestRelocation:
+    def test_range_move_preserves_values(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(5, 25), 3, mm)
+        mm.sync()
+        assert col.global_size() == 120
+        assert float(col.get(3, 10)[0]) == 10.0
+        col.update_dist()
+        assert col.get_distribution().owner_of(10) == 3
+
+    def test_move_splits_chunks(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(10, 12), 2, mm)  # middle of chunk 0
+        mm.sync()
+        assert float(col.get(2, 11)[0]) == 11.0
+        assert float(col.get(0, 9)[0]) == 9.0
+        assert float(col.get(0, 12)[0]) == 12.0
+
+    def test_bulk_count_move(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(1, 7, 0, mm)
+        mm.sync()
+        assert col.local_size(0) == 37 and col.local_size(1) == 23
+
+    def test_counts_matrix_two_phase(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(0, 10), 1, mm)
+        mm.sync()
+        m = mm.last_counts_matrix
+        assert m[0, 1] > 0 and m.sum() == m[0, 1]
+
+    def test_multi_collection_single_sync(self):
+        g, col = make_col()
+        bag = DistBag(g)
+        bag.put_batch(0, [np.ones(2)] * 5)
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(0, 5), 2, mm)
+        bag.move_at_sync_count(0, 3, 1, mm)
+        mm.sync()
+        assert bag.local_size(1) == 3 and col.get_distribution() is not None
+
+    def test_rotation_listing12(self):
+        """Paper Listing 12: bulk + range + rule in one sync."""
+        g = PlaceGroup(4)
+        bag = DistBag(g)
+        cl = DistArray(g, track=False)
+        dmap = DistMap(g)
+        for p in range(4):
+            bag.put_batch(p, [np.full(2, p)] * 10)
+            cl.add_chunk(p, LongRange(p * 10, p * 10 + 10),
+                         np.ones((10, 2)) * p)
+            dmap.put(p, f"key{p}", np.float32(p))
+        mm = CollectiveMoveManager(g)
+        for p in range(4):
+            dest = (p + 1) % 4
+            bag.move_at_sync_count(p, 10, dest, mm)
+            for r in cl.ranges(p):
+                cl.move_range_at_sync(r, dest, mm)
+            dmap.move_at_sync(p, lambda k, d=dest: d, mm)
+        mm.sync()
+        for p in range(4):
+            src = (p - 1) % 4
+            assert bag.local_size(p) == 10
+            assert float(bag.items(p)[0][0]) == src
+            assert dmap.get(p, f"key{src}") == src
+
+
+class TestTeamedOps:
+    def test_bag_gather(self):
+        g = PlaceGroup(4)
+        bag = DistBag(g)
+        for p in range(4):
+            bag.put_batch(p, [np.full(3, p)] * (p + 2))
+        total = bag.global_size()
+        bag.team_gather(0)
+        assert bag.local_size(0) == total
+
+    def test_map_relocate_by_distribution(self):
+        """Paper §4.4: contractedOrders.relocate(agentDistribution)."""
+        g = PlaceGroup(4)
+        m = DistMultiMap(g)
+        for k in range(20):
+            m.put(0, k, np.float32(k))
+        agents = RangeDistribution.block(20, 4)
+        m.relocate(agents)
+        for p in range(4):
+            for k in m.keys(p):
+                assert agents.owner_of(k) == p
+
+    def test_cachable_array_broadcast(self):
+        g = PlaceGroup(3)
+        ca = CachableArray(g, [np.zeros(4)], owner=0)
+        ca.local(0)[0][:] = 7.0
+        ca.broadcast(lambda v: v * 2, lambda local, u: u)
+        for p in range(3):
+            np.testing.assert_allclose(ca.local(p)[0], 14.0)
+
+    def test_cachable_chunked_share_allreduce(self):
+        """Paper Listings 9+11 (MolDyn replication + force sum)."""
+        g = PlaceGroup(4)
+        col = CachableChunkedList(g)
+        r = LongRange(0, 16)
+        col.add_chunk(0, r, np.ones((16, 3)))
+        col.share(0, r)
+        for p in range(4):
+            assert col.handle(p).chunks[r].shape == (16, 3)
+            col.handle(p).chunks[r][:, 0] = p  # per-replica contribution
+        col.allreduce(lambda rows: rows[:, :1],
+                      lambda rows, red: rows.__setitem__((slice(None),
+                                                          slice(0, 1)), red),
+                      op="sum")
+        for p in range(4):
+            np.testing.assert_allclose(col.handle(p).chunks[r][:, 0], 6.0)
+
+    def test_lazy_handles(self):
+        g, col = make_col(n_places=6, n=60)
+        fresh = DistArray(PlaceGroup(6))
+        assert fresh.allocated_places() == []
+        fresh.handle(3)
+        assert fresh.allocated_places() == [3]
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(8, 200),
+    n_places=st.integers(2, 6),
+    moves=st.lists(st.tuples(st.integers(0, 199), st.integers(1, 40),
+                             st.integers(0, 5)), max_size=8),
+)
+def test_property_relocation_preserves_multiset(n, n_places, moves):
+    """Any sequence of range moves preserves the global multiset of
+    entries and keeps the tracked distribution consistent (paper §4.6)."""
+    g, col = make_col(n_places=n_places, n=n, width=1)
+    before = sorted(float(col.get(col.get_distribution().owner_of(i), i)[0])
+                    for i in range(n))
+    mm = CollectiveMoveManager(g)
+    registered = False
+    claimed = []
+    spans = [(r.start, r.end) for r, _ in col.get_distribution().items()]
+    for start, size, dest_raw in moves:
+        start = start % n
+        end = min(start + size, n)
+        dest = dest_raw % n_places
+        # clamp to the single owner span containing `start` (the paper's
+        # moveRangeAtSync acts on locally-held ranges)
+        span = next(((s, e) for s, e in spans if s <= start < e), None)
+        if span is None:
+            continue
+        end = min(end, span[1])
+        if end <= start:
+            continue
+        if any(s < end and start < e for s, e in claimed):
+            continue  # same-sync moves must not overlap
+        claimed.append((start, end))
+        col.move_range_at_sync(LongRange(start, end), dest, mm)
+        registered = True
+    if registered:
+        mm.sync()
+    col.update_dist()
+    d = col.get_distribution()
+    assert d.total == n
+    after = sorted(float(col.get(d.owner_of(i), i)[0]) for i in range(n))
+    assert before == after
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(2, 300), ndiv=st.integers(1, 8),
+       n_places=st.integers(1, 6), seed=st.integers(0, 10))
+def test_property_product_partition(n, ndiv, n_places, seed):
+    """teamedSplit covers each unordered pair exactly once (paper §4.10)."""
+    prod = RangedListProduct.new_product_triangle(n)
+    splits = prod.teamed_split(ndiv, ndiv, n_places, seed)
+    assert sum(s.total_pairs() for s in splits) == n * (n - 1) // 2
+    seen = set()
+    for s in splits:
+        s.for_each_pair(lambda i, j: seen.add((i, j)))
+    assert len(seen) == n * (n - 1) // 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(grains=st.integers(1, 6), n=st.integers(1, 50),
+       adds=st.lists(st.tuples(st.integers(0, 49), st.floats(-5, 5)),
+                     max_size=30))
+def test_property_accumulator_matches_serial(grains, n, adds):
+    acc = Accumulator(LongRange(0, n), ())
+    bufs = [acc.grain() for _ in range(grains)]
+    serial = np.zeros(n)
+    for i, (idx, val) in enumerate(adds):
+        idx = idx % n
+        acc.add(bufs[i % grains], idx, val)
+        serial[idx] += val
+    np.testing.assert_allclose(acc.totals(), serial, rtol=1e-9, atol=1e-9)

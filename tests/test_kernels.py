@@ -1,0 +1,114 @@
+"""Pallas kernel allclose sweeps vs pure-jnp oracles (interpret mode)."""
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.mlstm import mlstm_chunkwise
+from repro.kernels.moe_dispatch import gather_rows, moe_combine
+from repro.kernels.rg_lru import rg_lru
+
+RNG = np.random.default_rng(42)
+
+
+def rnd(*shape, dtype=np.float32, scale=1.0):
+    return (RNG.normal(size=shape) * scale).astype(dtype)
+
+
+ATTN_CASES = [
+    # B, Hq, Hkv, Sq, Skv, D, causal, window, softcap, dtype
+    (2, 4, 2, 128, 128, 64, True, None, 0.0, np.float32),
+    (1, 8, 1, 256, 256, 32, True, None, 0.0, np.float32),     # MQA
+    (1, 4, 4, 100, 100, 48, True, None, 0.0, np.float32),     # unaligned
+    (1, 4, 2, 256, 256, 64, True, 128, 0.0, np.float32),      # window
+    (1, 2, 2, 128, 128, 64, True, None, 50.0, np.float32),    # softcap
+    (2, 2, 2, 64, 192, 32, False, None, 0.0, np.float32),     # cross
+    (1, 4, 2, 128, 128, 64, True, None, 0.0, np.dtype("bfloat16")),
+]
+
+
+@pytest.mark.parametrize("case", ATTN_CASES,
+                         ids=[f"attn{i}" for i in range(len(ATTN_CASES))])
+def test_flash_attention_sweep(case):
+    B, Hq, Hkv, Sq, Skv, D, causal, window, cap, dtype = case
+    q = rnd(B, Hq, Sq, D).astype(dtype)
+    k = rnd(B, Hkv, Skv, D).astype(dtype)
+    v = rnd(B, Hkv, Skv, D).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal, window=window,
+                             softcap=cap)
+    tol = 2e-2 if dtype == np.dtype("bfloat16") else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_matches_flash_ref():
+    """kernel == blocked-XLA path == naive oracle (3-way agreement)."""
+    q, k, v = rnd(1, 4, 160, 32), rnd(1, 2, 160, 32), rnd(1, 2, 160, 32)
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_k=32,
+                        interpret=True)
+    b = ref.flash_ref(q, k, v, causal=True, block_q=32)
+    c = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(b), np.asarray(c), atol=2e-5)
+
+
+@pytest.mark.parametrize("N,M,D", [(64, 96, 128), (10, 3, 8), (128, 128, 256)])
+def test_gather_rows_sweep(N, M, D):
+    x = rnd(N, D)
+    idx = RNG.integers(0, N, size=(M,)).astype(np.int32)
+    out = gather_rows(x, idx, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(ref.gather_rows_ref(x, idx)))
+
+
+@pytest.mark.parametrize("T,K,S,D", [(32, 4, 128, 64), (7, 2, 16, 8),
+                                     (64, 8, 512, 128)])
+def test_moe_combine_sweep(T, K, S, D):
+    y = rnd(S, D)
+    slots = RNG.integers(-1, S, size=(T, K)).astype(np.int32)
+    w = rnd(T, K)
+    out = moe_combine(y, slots, w, interpret=True)
+    want = ref.moe_combine_ref(y, slots, w)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("B,S,D,bs,bd", [
+    (2, 256, 128, 64, 64), (1, 100, 96, 32, 128), (3, 64, 32, 128, 16),
+    (1, 512, 256, 128, 128),
+])
+def test_rg_lru_sweep(B, S, D, bs, bd):
+    x = rnd(B, S, D)
+    a = (0.5 + 0.49 * RNG.random(size=(B, S, D))).astype(np.float32)
+    h0 = rnd(B, D)
+    hs, hl = rg_lru(x, a, h0, block_s=bs, block_d=bd, interpret=True)
+    rhs, rhl = ref.rg_lru_ref(x, a, h0)
+    np.testing.assert_allclose(np.asarray(hs), np.asarray(rhs), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hl), np.asarray(rhl), atol=1e-4)
+
+
+@pytest.mark.parametrize("BH,S,d,bs", [
+    (2, 128, 64, 32), (1, 100, 32, 64), (4, 64, 16, 64), (1, 256, 64, 128),
+])
+def test_mlstm_sweep(BH, S, d, bs):
+    q, k, v = rnd(BH, S, d), rnd(BH, S, d), rnd(BH, S, d)
+    ig = rnd(BH, S)
+    fg = rnd(BH, S) + 2.0
+    h, (C, n, m) = mlstm_chunkwise(q, k, v, ig, fg, block_s=bs,
+                                   interpret=True)
+    href, (Cr, nr, mr) = ref.mlstm_ref(q, k, v, ig, fg)
+    scale = np.abs(np.asarray(href)).max() + 1e-9
+    assert np.abs(np.asarray(h) - np.asarray(href)).max() / scale < 5e-4
+    np.testing.assert_allclose(np.asarray(C), np.asarray(Cr), atol=1e-3,
+                               rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), atol=1e-4)
+
+
+def test_ops_backend_dispatch():
+    q, k, v = rnd(1, 2, 64, 32), rnd(1, 2, 64, 32), rnd(1, 2, 64, 32)
+    a = ops.attention(q, k, v, impl="xla")
+    b = ops.attention(q, k, v, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+    with pytest.raises(ValueError):
+        ops.set_backend("cuda")
