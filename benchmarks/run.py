@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
 * moldyn_*        — paper Figs 5–6 (step time, allreduce share, tile balance)
 * plham_*         — paper Fig 7 (no-lb vs level-extremes vs proportional,
                     even / uneven / disturbed clusters)
+* glb_*           — global load balancer: even / uneven / disturbed
+                    clusters vs no-lb, async-overlap trace, steal latency
 * reloc_*         — §5.3 relocation engine micro-benchmarks (host + SPMD)
 * kernel_*        — Pallas-kernel ops (XLA path wall time on CPU; the
                     Pallas path is the TPU target, validated in tests)
@@ -87,6 +89,70 @@ def bench_plham():
             row(f"plham_{cname}_{strat}", wall_us,
                 f"simtime={sim_t:.0f};gain_pct={gain:.1f};"
                 f"reloc_bytes={sim.relocated}")
+
+
+def bench_glb(only=None):
+    """GLB vs no-lb on the paper's cluster profiles, plus steal latency.
+
+    ``glb_disturbed`` is the acceptance row: improvement_x reports the
+    simulated iteration-time gain over no-lb, and overlap/counts_dt_us
+    report the host-side sync_async trace (phase-1 counts exchange
+    completing before the finish() barrier = overlapped compute).
+    """
+    from repro.core import (ClusterSim, DistArray, DistArrayWorkload,
+                            GLBConfig, GlobalLoadBalancer, LongRange,
+                            PlaceGroup)
+    if only:  # bare group selector = everything
+        only = [s for s in only if s != "glb"] or None
+    profiles = {
+        "glb_even": dict(n_places=8, n_entries=1600),
+        "glb_uneven": dict(n_places=8, n_entries=1600,
+                           speeds=(1, 1, 1, 1, 1, 1, 1, 3)),
+        "glb_disturbed": dict(n_places=8, n_entries=1600,
+                              disturb_period=40, disturb_factor=0.2),
+    }
+    for name, kw in profiles.items():
+        if only and name not in only:
+            continue
+        base = ClusterSim(seed=1, **kw).run(200)
+        sim = ClusterSim(seed=1, glb=GLBConfig(period=5,
+                                               policy="proportional"), **kw)
+        t0 = time.perf_counter()
+        simtime = sim.run(200)
+        wall_us = (time.perf_counter() - t0) * 1e6 / 200
+        st = sim.balancer.stats
+        tr = sim.balancer.last_trace or {}
+        counts_dt = (tr.get("t_counts_ready", 0) - tr.get("t_submit", 0)) * 1e6
+        row(name, wall_us,
+            f"simtime={simtime:.0f};no_lb={base:.0f};"
+            f"improvement_x={base / simtime:.2f};"
+            f"overlap={st.overlap_fraction:.2f};"
+            f"counts_dt_us={counts_dt:.0f};moved={st.entries_rebalanced};"
+            f"reloc_bytes={st.bytes_moved}")
+    if only and not any(s.startswith("glb_steal_latency") for s in only):
+        return
+    topos = ("ring", "hypercube")
+    if only and any(s.startswith("glb_steal_latency_") for s in only):
+        topos = tuple(t for t in topos if f"glb_steal_latency_{t}" in only)
+    for topo in topos:
+        g = PlaceGroup(16)
+        col = DistArray(g, track=True)
+        col.add_chunk(0, LongRange(0, 4000),
+                      np.arange(4000, dtype=np.float64)[:, None])
+        for p in g.members:
+            col.handle(p)
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col),
+                                 GLBConfig(lifeline=topo))
+        t0 = time.perf_counter()
+        rounds = 0
+        while rounds < 12 and glb.steal_pass() > 0:
+            rounds += 1
+        us = (time.perf_counter() - t0) * 1e6
+        served = max(glb.stats.steals_served, 1)
+        row(f"glb_steal_latency_{topo}", us / served,
+            f"steals={glb.stats.steals_served};rounds={rounds};"
+            f"hops_per_steal={glb.stats.steal_hops / served:.2f};"
+            f"min_load={min(col.local_size(p) for p in g.members)}")
 
 
 def bench_relocation():
@@ -201,15 +267,40 @@ def roofline_table():
             f"frac={r.get('roofline_fraction', 0):.3f}")
 
 
-def main() -> None:
+GROUPS = {
+    "kmeans": lambda sels: bench_kmeans(),
+    "moldyn": lambda sels: bench_moldyn(),
+    "plham": lambda sels: bench_plham(),
+    "glb": lambda sels: bench_glb(only=sels or None),
+    "reloc": lambda sels: bench_relocation(),
+    "kernel": lambda sels: bench_kernels(),
+    "train": lambda sels: bench_train_smoke(),
+    "roofline": lambda sels: roofline_table(),
+}
+
+
+def main(argv=None) -> None:
+    """No args: run everything.  With args, run only the selected rows —
+    a selector is a group prefix (``glb``) or a row name
+    (``glb_disturbed``, ``glb_steal_latency``)."""
+    import sys
+    sels = list(sys.argv[1:] if argv is None else argv)
     print("name,us_per_call,derived")
-    bench_kmeans()
-    bench_moldyn()
-    bench_plham()
-    bench_relocation()
-    bench_kernels()
-    bench_train_smoke()
-    roofline_table()
+    if not sels:
+        for fn in GROUPS.values():
+            fn([])
+        return
+    matched = set()
+    for group, fn in GROUPS.items():
+        mine = [s for s in sels if s == group or s.startswith(group + "_")]
+        if mine:
+            matched.update(mine)
+            fn(mine)
+    unknown = [s for s in sels if s not in matched]
+    if unknown:
+        print(f"error: unknown selector(s) {unknown}; "
+              f"groups: {', '.join(GROUPS)}", file=sys.stderr)
+        raise SystemExit(2)
 
 
 if __name__ == "__main__":

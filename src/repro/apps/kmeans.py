@@ -11,7 +11,9 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..core import DistArray, LongRange, PlaceGroup, local_reduce, team_reduce
+from ..core import (DistArray, DistArrayWorkload, GLBConfig,
+                    GlobalLoadBalancer, LongRange, PlaceGroup, local_reduce,
+                    team_reduce)
 
 __all__ = ["AveragePosition", "ClosestPoint", "KMeans"]
 
@@ -80,6 +82,8 @@ class KMeans:
     dim: int = 3
     k: int = 8
     seed: int = 0
+    glb: GLBConfig | None = None  # rebalance points across places
+    speeds: tuple = ()            # per-place speed factors (simulated)
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
@@ -94,6 +98,12 @@ class KMeans:
                 self.points.add_chunk(p, r, rows[r.start:r.end])
         self.centroids = pts[rng.choice(self.n_points, self.k, replace=False)]
         self.true_centers = centers
+        if not self.speeds:
+            self.speeds = (1.0,) * self.n_places
+        self.balancer = None
+        if self.glb is not None:
+            self.balancer = GlobalLoadBalancer(
+                self.group, DistArrayWorkload(self.points), self.glb)
 
     def assign_step(self):
         """parallelForEach: assign each point to its nearest centroid."""
@@ -109,6 +119,10 @@ class KMeans:
             self.points.map_chunks(p, assign)
 
     def iterate(self) -> np.ndarray:
+        if self.balancer is not None:
+            # barrier for the previous iteration's in-flight relocation:
+            # the points must be settled before we touch them again
+            self.balancer.finish()
         self.assign_step()
         avg_r = AveragePosition(self.k, self.dim)
         avg_state = team_reduce(self.points, avg_r)       # teamed reduction 1
@@ -116,9 +130,26 @@ class KMeans:
         cp_r = ClosestPoint(self.k, self.dim, avg)
         cp_state = team_reduce(self.points, cp_r)         # teamed reduction 2
         self.centroids = cp_state["coord"]
+        if self.balancer is not None:
+            # assignment cost ∝ local points / place speed; the launched
+            # relocation overlaps whatever the caller does between
+            # iterations (convergence checks, logging, inertia)
+            loads = np.asarray([self.points.local_size(p)
+                                for p in self.group.members], np.float64)
+            self.balancer.record_all(
+                np.maximum(loads / np.asarray(self.speeds), 1e-9))
+            self.balancer.step()
         return self.centroids
 
+    def finish(self) -> None:
+        """Drain the in-flight relocation: call before reading
+        ``self.points`` directly after the last :meth:`iterate` (the
+        launched transfer only settles at the next internal barrier)."""
+        if self.balancer is not None:
+            self.balancer.finish()
+
     def inertia(self) -> float:
+        self.finish()
         total = 0.0
         for p in self.group.members:
             rows, _ = self.points.to_local_matrix(p)

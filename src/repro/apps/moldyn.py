@@ -11,7 +11,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..core import (Accumulator, CachableChunkedList, LongRange, PlaceGroup,
+from ..core import (Accumulator, CachableChunkedList, GLBConfig,
+                    GlobalLoadBalancer, ListWorkload, LongRange, PlaceGroup,
                     RangedListProduct)
 
 __all__ = ["MolDyn"]
@@ -33,6 +34,8 @@ class MolDyn:
     ndivide: int = 5
     seed: int = 0
     dt: float = 1e-4
+    glb: GLBConfig | None = None  # rebalance force tiles between places
+    speeds: tuple = ()            # per-place speed factors (simulated)
 
     def __post_init__(self):
         rng = np.random.default_rng(self.seed)
@@ -54,6 +57,18 @@ class MolDyn:
         self.tiles = prod.teamed_split(self.ndivide, self.ndivide,
                                        self.n_places, self.seed)
         self.allreduce_bytes = 0
+        if not self.speeds:
+            self.speeds = (1.0,) * self.n_places
+        self.balancer = None
+        if self.glb is not None:
+            # particles replicate everywhere, so the balanced quantity
+            # is the *tile schedule*: moving a Tile costs nothing on the
+            # wire (pure ownership change), weighted by its pair count
+            self.balancer = GlobalLoadBalancer(
+                self.group,
+                ListWorkload([s.tiles for s in self.tiles],
+                             weight=lambda t: t.pairs),
+                self.glb)
 
     def _local_forces(self, place: int) -> np.ndarray:
         """Force contribution of this place's tiles via an accumulator."""
@@ -83,6 +98,13 @@ class MolDyn:
         for p in self.group.members:
             rows = self.particles.handle(p).chunks[self.range]
             rows[:, 6:9] = self._local_forces(p)
+        if self.balancer is not None:
+            # pair-force cost ∝ assigned tile pairs / place speed
+            pairs = np.asarray([sum(t.pairs for t in split.tiles)
+                                for split in self.tiles], np.float64)
+            self.balancer.record_all(
+                np.maximum(pairs / np.asarray(self.speeds), 1e-9))
+            self.balancer.step()
         # teamed allreduce(SUM) of the force lanes (Listing 11)
         before = self.particles.comm.bytes_moved
         self.particles.allreduce(

@@ -19,9 +19,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from ..core import (CachableArray, CollectiveMoveManager, DistArray, DistBag,
-                    DistMultiMap, LevelExtremes, LoadBalancer, LongRange,
-                    PlaceGroup, Proportional)
+from ..core import (CachableArray, DistArray, DistArrayWorkload, DistBag,
+                    DistMultiMap, GLBConfig, GlobalLoadBalancer,
+                    LevelExtremes, LongRange, PlaceGroup, Proportional)
 
 __all__ = ["PlhamSim"]
 
@@ -56,9 +56,16 @@ class PlhamSim:
                  "level_extremes": LevelExtremes(),
                  "proportional": Proportional(damping=0.8)}[self.strategy]
         self.workers = list(workers)
-        self.balancer = (LoadBalancer(len(self.workers), strategy=strat,
-                                      period=self.lb_period)
-                         if strat else None)
+        # The GLB replaces the hand-rolled balance loop: it accounts the
+        # worker times, plans with the same strategy objects, and runs
+        # the relocation asynchronously so it overlaps order matching.
+        self.glb = None
+        if strat is not None:
+            self.glb = GlobalLoadBalancer(
+                self.group.subgroup(self.workers),
+                DistArrayWorkload(self.agents, members=self.workers),
+                GLBConfig(period=self.lb_period, policy=strat,
+                          asynchronous=True, seed=self.seed))
         if not self.speeds:
             self.speeds = tuple([1.0] * self.n_places)
         self.iter = 0
@@ -102,7 +109,17 @@ class PlhamSim:
         # (3) teamed gather of orders on the master
         orders.team_gather(0)
 
-        # (4) match orders on master; optional balancing runs concurrently
+        # (4) the GLB launches the relocation asynchronously, then the
+        # master matches orders while phase 1 (counts + packing) runs in
+        # the background (paper §4.5: balance over the agent-handling
+        # places only; master holds no agents in Config A)
+        decision = None
+        if self.glb:
+            w_times = np.maximum(times[self.workers], 1e-9)
+            self.glb.record_all(w_times)
+            bytes_before = self.glb.stats.bytes_moved
+            decision = self.glb.step()
+
         all_orders = orders.items(0)
         match_time = 0.2 * len(all_orders) / 100.0 / self._place_speed(0)
         contracted = DistMultiMap(g)
@@ -110,28 +127,13 @@ class PlhamSim:
             contracted.put(0, int(o[0]), np.float32(o[1]))
 
         lb_time = 0.0
-        if self.balancer:
-            # balance over the agent-handling places only (master holds no
-            # agents in the distributed setup — paper Config A)
-            workers = self.workers
-            w_times = np.maximum(times[workers], 1e-9)
-            loads = self.agents.get_distribution().loads(self.n_places)
-            self.balancer.record_all(w_times)
-            decision = self.balancer.step(loads[workers])
+        if self.glb:
+            # barrier before dispatch: deliver payloads + updateDist
+            self.glb.finish()
+            self.relocated += self.glb.stats.bytes_moved - bytes_before
             if decision and decision.moves:
-                mm = CollectiveMoveManager(g)
-                for src_i, dest_i, count in decision.moves:
-                    src, dest = workers[src_i], workers[dest_i]
-                    avail = self.agents.local_size(src)
-                    n = min(count, max(avail - 1, 0))
-                    if n:
-                        self.agents.move_at_sync_count(src, n, dest, mm)
-                if mm.pending():
-                    mm.sync()
-                    self.relocated += mm.last_payload_bytes
-                    self.agents.update_dist()
-                # relocation overlaps order handling (paper §4.5): only
-                # the excess over match_time costs wall time
+                # relocation overlapped order handling: only the excess
+                # over match_time costs wall time
                 lb_time = max(0.0, 0.01 - match_time)
 
         # (5) dispatch contracted updates by the *current* distribution

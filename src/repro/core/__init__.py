@@ -17,8 +17,21 @@ from .collections import (
     PlaceGroup,
 )
 from .distribution import DistributionDelta, LongRange, RangeDistribution
+from .glb import (
+    ClusterSim,
+    DistArrayWorkload,
+    GLBConfig,
+    GLBStats,
+    GlobalLoadBalancer,
+    ListWorkload,
+    hypercube_lifelines,
+    moves_to_matrix,
+    ring_lifelines,
+    spmd_rebalance,
+)
 from .product import RangedListProduct, Tile
 from .relocation import (
+    AsyncRelocation,
     CollectiveMoveManager,
     spmd_counts,
     spmd_relocate,
@@ -39,9 +52,12 @@ __all__ = [
     "CachableArray", "CachableChunkedList", "DistArray", "DistBag",
     "DistIdMap", "DistMap", "DistMultiMap", "PlaceGroup",
     "DistributionDelta", "LongRange", "RangeDistribution",
+    "ClusterSim", "DistArrayWorkload", "GLBConfig", "GLBStats",
+    "GlobalLoadBalancer", "ListWorkload", "hypercube_lifelines",
+    "moves_to_matrix", "ring_lifelines", "spmd_rebalance",
     "RangedListProduct", "Tile",
-    "CollectiveMoveManager", "spmd_counts", "spmd_relocate",
-    "spmd_relocate_back",
+    "AsyncRelocation", "CollectiveMoveManager", "spmd_counts",
+    "spmd_relocate", "spmd_relocate_back",
     "Reducer", "allgather1", "local_reduce", "spmd_allgather1",
     "spmd_team_reduce", "team_reduce",
 ]

@@ -1,0 +1,510 @@
+"""Global load balancer (GLB) on the relocation engine.
+
+The paper's headline capability — "programs adapt to uneven or evolving
+cluster performance" (§4.5, §6.3) — shipped in this repo only as
+one-shot move *plans* (``balancer.py``) that callers had to drive by
+hand.  This module turns it into a library feature:
+
+* **Accounting** — per-place compute time exchanged with
+  ``teamed.allgather1`` (the paper's load-balancer cost exchange),
+  optionally EMA-smoothed across windows.
+* **Policy slot** — any object with ``plan(times, loads) ->
+  BalanceDecision``; :class:`~repro.core.balancer.LevelExtremes` and
+  :class:`~repro.core.balancer.Proportional` plug in unchanged.
+* **Asynchronous relocation** — decisions execute through
+  :meth:`CollectiveMoveManager.sync_async`, so the counts Alltoall and
+  payload packing overlap the caller's critical-path compute; the next
+  ``step()`` (or an explicit ``finish()``) is the reconciling barrier.
+* **Lifeline work stealing** — an idle place first tries a few random
+  victims, then walks its *lifeline graph* (ring or hypercube, after
+  Saraswat et al.'s lifeline-based GLB); termination is detected when a
+  whole steal pass acquires nothing and every place is idle.
+* **SPMD mirror** — :func:`spmd_rebalance` applies a
+  :class:`BalanceDecision` *inside* jit/shard_map as a capacity-masked
+  ``lax.all_to_all`` shuffle, reusing :func:`spmd_relocate`.
+
+Work sources are abstracted behind a two-method protocol (``loads`` /
+``transfer``) so the same balancer drives relocatable collections
+(PlhamJ agents, K-Means points) and plain per-place work lists (MolDyn
+force tiles).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Protocol, Sequence
+
+import numpy as np
+
+from .balancer import BalanceDecision, LevelExtremes, Proportional
+from .collections import DistArray, PlaceGroup
+from .relocation import AsyncRelocation, CollectiveMoveManager
+from .teamed import allgather1
+
+__all__ = [
+    "GLBConfig",
+    "GLBStats",
+    "GlobalLoadBalancer",
+    "Workload",
+    "DistArrayWorkload",
+    "ListWorkload",
+    "ring_lifelines",
+    "hypercube_lifelines",
+    "moves_to_matrix",
+    "spmd_rebalance",
+    "ClusterSim",
+]
+
+
+# ---------------------------------------------------------------------------
+# Lifeline graphs
+# ---------------------------------------------------------------------------
+def ring_lifelines(n: int) -> dict[int, tuple[int, ...]]:
+    """Directed ring: place i's lifeline is (i+1) mod n.  Diameter n-1 —
+    simple, but steal requests can take O(n) hops to find work."""
+    if n <= 1:
+        return {0: ()} if n else {}
+    return {i: ((i + 1) % n,) for i in range(n)}
+
+
+def hypercube_lifelines(n: int) -> dict[int, tuple[int, ...]]:
+    """Hypercube lifelines: neighbors differ in one bit of the member
+    index (clipped to [0, n)).  log2(n) links per place, diameter
+    ceil(log2 n) — the topology the lifeline-GLB literature recommends
+    for fast work diffusion."""
+    if n <= 1:
+        return {0: ()} if n else {}
+    bits = max(1, (n - 1).bit_length())
+    out = {}
+    for i in range(n):
+        nbrs = []
+        for b in range(bits):
+            j = i ^ (1 << b)
+            if j < n:
+                nbrs.append(j)
+        out[i] = tuple(nbrs)
+    return out
+
+
+_LIFELINES: dict[str, Callable[[int], dict[int, tuple[int, ...]]]] = {
+    "ring": ring_lifelines,
+    "hypercube": hypercube_lifelines,
+}
+
+
+# ---------------------------------------------------------------------------
+# Work sources
+# ---------------------------------------------------------------------------
+class Workload(Protocol):
+    """What the GLB balances: anything that can report per-member loads
+    and transfer entries between members."""
+
+    def loads(self) -> np.ndarray:  # int64 (n_members,)
+        ...
+
+    def transfer(self, moves: Sequence[tuple[int, int, int]], *,
+                 asynchronous: bool = False) -> AsyncRelocation | None:
+        """Execute (src_member, dest_member, count) moves; async mode
+        returns an :class:`AsyncRelocation` to finish later."""
+        ...
+
+
+class DistArrayWorkload:
+    """A :class:`DistArray` balanced over ``members`` (defaults to its
+    whole group).  Transfers ride the §5.3 relocation engine and
+    reconcile the tracked distribution on finish."""
+
+    def __init__(self, col: DistArray, members: Sequence[int] | None = None,
+                 *, min_keep: int = 1):
+        self.col = col
+        self.members = tuple(members) if members is not None \
+            else col.group.members
+        self.min_keep = min_keep
+        self.last_transfer_count = 0   # entries actually moved (clamped)
+
+    def loads(self) -> np.ndarray:
+        return np.asarray([self.col.local_size(p) for p in self.members],
+                          np.int64)
+
+    def transfer(self, moves, *, asynchronous: bool = False):
+        mm = CollectiveMoveManager(self.col.group)
+        moved = 0
+        for src_i, dest_i, count in moves:
+            src, dest = self.members[src_i], self.members[dest_i]
+            avail = self.col.local_size(src)
+            n = min(int(count), max(avail - self.min_keep, 0))
+            if n > 0:
+                self.col.move_at_sync_count(src, n, dest, mm)
+                moved += n
+        self.last_transfer_count = moved
+        if not mm.pending():
+            return None
+        update = (self.col,) if self.col.track else ()
+        handle = mm.sync_async(update_dists=update)
+        if not asynchronous:
+            handle.finish()
+        return handle
+
+
+class ListWorkload:
+    """Per-member Python lists of work items (e.g. MolDyn force tiles).
+    ``weight`` maps an item to its cost in load units; transfers pop
+    items from the source until the requested load has moved."""
+
+    def __init__(self, lists: Sequence[list], *,
+                 weight: Callable[[Any], int] = lambda item: 1,
+                 min_keep: int = 0):
+        self.lists = list(lists)
+        self.weight = weight
+        self.min_keep = min_keep
+        self.last_transfer_count = 0
+
+    def loads(self) -> np.ndarray:
+        return np.asarray([sum(self.weight(it) for it in lst)
+                           for lst in self.lists], np.int64)
+
+    def transfer(self, moves, *, asynchronous: bool = False):
+        del asynchronous  # host lists: transfer is immediate
+        total = 0
+        for src_i, dest_i, count in moves:
+            src = self.lists[src_i]
+            moved = 0
+            while src and len(src) > self.min_keep and moved < count:
+                item = src.pop()
+                self.lists[dest_i].append(item)
+                moved += self.weight(item)
+            total += moved
+        self.last_transfer_count = total
+        return None
+
+
+# ---------------------------------------------------------------------------
+# Config / stats
+# ---------------------------------------------------------------------------
+@dataclass
+class GLBConfig:
+    period: int = 10             # iterations between policy rebalances
+    policy: Any = "level_extremes"  # name or plan(times, loads) object
+    ema: float = 0.0             # smooth timings across windows
+    asynchronous: bool = True    # overlap relocation with caller compute
+    lifeline: str = "hypercube"  # "ring" | "hypercube"
+    random_steal_attempts: int = 2
+    steal_ratio: float = 0.5     # fraction of victim surplus per steal
+    idle_threshold: int = 0      # idle when load <= this
+    min_keep: int = 1            # victim never drops below this
+    seed: int = 0
+
+    def make_policy(self):
+        if not isinstance(self.policy, str):
+            return self.policy
+        return {"level_extremes": LevelExtremes,
+                "proportional": Proportional}[self.policy]()
+
+
+@dataclass
+class GLBStats:
+    rebalances: int = 0
+    entries_rebalanced: int = 0
+    steals_attempted: int = 0
+    steals_served: int = 0
+    entries_stolen: int = 0
+    steal_hops: int = 0
+    steal_latency_us: float = 0.0   # accumulated wall time in steal()
+    bytes_moved: int = 0            # relocation payload bytes (rebalances)
+    syncs_overlapped: int = 0
+    syncs_total: int = 0
+
+    @property
+    def overlap_fraction(self) -> float:
+        return self.syncs_overlapped / max(self.syncs_total, 1)
+
+
+# ---------------------------------------------------------------------------
+# The balancer
+# ---------------------------------------------------------------------------
+class GlobalLoadBalancer:
+    """Periodic policy-driven rebalancing + lifeline work stealing.
+
+    Usage (the paper's Listing 7 loop, now one call per iteration)::
+
+        glb = GlobalLoadBalancer(group, DistArrayWorkload(col), GLBConfig())
+        for it in range(iters):
+            t = compute(...)          # per-place compute times
+            glb.record_all(t)
+            glb.step()                # relocation overlaps next compute
+        glb.finish()                  # drain the in-flight relocation
+
+    ``step()`` first *finishes* the previous window's in-flight
+    relocation (the reconciling barrier), then — every ``period``
+    iterations — exchanges times via ``allgather1``, asks the policy for
+    a plan, and launches it with ``sync_async`` so packing overlaps the
+    caller's next compute phase.
+    """
+
+    def __init__(self, group: PlaceGroup | int, workload: Workload,
+                 config: GLBConfig | None = None):
+        if isinstance(group, int):
+            group = PlaceGroup(group)
+        self.group = group
+        self.workload = workload
+        self.cfg = config or GLBConfig()
+        self.n = group.size()
+        # cfg.min_keep is the victim floor for BOTH paths: steal uses it
+        # directly; rebalance transfers clamp in the workload, so push
+        # the (stricter) config floor down to it.
+        if hasattr(workload, "min_keep"):
+            workload.min_keep = max(workload.min_keep, self.cfg.min_keep)
+        self.policy = self.cfg.make_policy()
+        self.lifelines = _LIFELINES[self.cfg.lifeline](self.n)
+        self.rng = np.random.default_rng(self.cfg.seed)
+        self.stats = GLBStats()
+        self.history: list[BalanceDecision] = []
+        self.iter = 0
+        self._acc = np.zeros(self.n, np.float64)
+        self._smoothed: np.ndarray | None = None
+        self._pending: AsyncRelocation | None = None
+        self._terminated = False
+        self.last_trace: dict[str, float] | None = None
+
+    # -- time accounting (the allGather1 feed, paper §4.5) ---------------
+    def record(self, member: int, seconds: float) -> None:
+        self._acc[member] += seconds
+
+    def record_all(self, seconds) -> None:
+        self._acc += np.asarray(seconds, np.float64)
+
+    # -- the periodic loop ------------------------------------------------
+    def step(self) -> BalanceDecision | None:
+        """Advance one iteration; every ``period`` iterations exchange
+        times, plan, and launch the relocation.  Returns the decision on
+        trigger iterations (possibly with zero moves), else None."""
+        self.finish()
+        self.iter += 1
+        if self.iter % self.cfg.period != 0:
+            return None
+        times = allgather1(self.group, self._acc)   # teamed cost exchange
+        if self.cfg.ema > 0:
+            if self._smoothed is None:
+                self._smoothed = times
+            else:
+                self._smoothed = (self.cfg.ema * self._smoothed
+                                  + (1 - self.cfg.ema) * times)
+            times = self._smoothed
+        decision = self.policy.plan(times, self.workload.loads())
+        self._acc[:] = 0.0
+        self.history.append(decision)
+        if decision.moves:
+            self.stats.rebalances += 1
+            self._pending = self.workload.transfer(
+                decision.moves, asynchronous=self.cfg.asynchronous)
+            # account what actually moved after min_keep/availability
+            # clamping, not the policy's planned total
+            self.stats.entries_rebalanced += getattr(
+                self.workload, "last_transfer_count", decision.total_moved)
+        return decision
+
+    def finish(self) -> None:
+        """Barrier for the in-flight relocation (no-op when idle)."""
+        if self._pending is not None:
+            self._pending.finish()
+            self.stats.syncs_total += 1
+            self.stats.bytes_moved += self._pending.manager.last_payload_bytes
+            if self._pending.overlapped:
+                self.stats.syncs_overlapped += 1
+            self.last_trace = dict(self._pending.trace)
+            self._pending = None
+
+    # -- lifeline stealing ------------------------------------------------
+    def _serve(self, victim: int, thief: int) -> int:
+        """How much ``victim`` can give ``thief`` right now."""
+        load = int(self.workload.loads()[victim])
+        surplus = load - self.cfg.min_keep
+        if surplus <= 0:
+            return 0
+        return max(1, int(surplus * self.cfg.steal_ratio))
+
+    def steal(self, thief: int) -> int:
+        """Acquire work for an idle ``thief``: first
+        ``random_steal_attempts`` random victims, then a breadth-first
+        walk of the lifeline graph.  Returns entries acquired (0 means
+        the thief hangs on its lifelines — with every place in that
+        state, the computation has terminated)."""
+        self.finish()   # never race an in-flight rebalance
+        t0 = time.perf_counter()
+        self.stats.steals_attempted += 1
+        loads = self.workload.loads()
+        candidates: list[tuple[int, int]] = []  # (victim, hops)
+        others = [p for p in range(self.n) if p != thief]
+        if others and self.cfg.random_steal_attempts > 0:
+            picks = self.rng.choice(
+                others, size=min(self.cfg.random_steal_attempts, len(others)),
+                replace=False)
+            candidates += [(int(v), 1) for v in picks]
+        # lifeline BFS (termination-safe: bounded by graph size)
+        seen, frontier, hops = {thief}, [thief], 0
+        while frontier:
+            hops += 1
+            nxt = []
+            for u in frontier:
+                for v in self.lifelines.get(u, ()):
+                    if v not in seen:
+                        seen.add(v)
+                        nxt.append(v)
+                        candidates.append((v, hops))
+            frontier = nxt
+        for victim, nhops in candidates:
+            if loads[victim] <= self.cfg.min_keep:
+                continue
+            count = self._serve(victim, thief)
+            if count <= 0:
+                continue
+            handle = self.workload.transfer(((victim, thief, count),))
+            if handle is not None:
+                self.stats.bytes_moved += handle.manager.last_payload_bytes
+            count = getattr(self.workload, "last_transfer_count", count)
+            if count <= 0:
+                continue
+            self.stats.steals_served += 1
+            self.stats.entries_stolen += count
+            self.stats.steal_hops += nhops
+            self.stats.steal_latency_us += (time.perf_counter() - t0) * 1e6
+            return count
+        self.stats.steal_latency_us += (time.perf_counter() - t0) * 1e6
+        return 0
+
+    def steal_pass(self) -> int:
+        """One round of stealing: every idle place tries to acquire
+        work.  Sets the terminated flag when nothing moved and every
+        place is idle (distributed termination detection, host model —
+        device-side this is a psum over outstanding-work counters)."""
+        self.finish()
+        loads = self.workload.loads()
+        total = 0
+        for p in range(self.n):
+            if loads[p] <= self.cfg.idle_threshold:
+                total += self.steal(p)
+        if total == 0 and bool(
+                np.all(self.workload.loads() <= self.cfg.idle_threshold)):
+            self._terminated = True
+        return total
+
+    def is_terminated(self) -> bool:
+        return self._terminated
+
+
+# ---------------------------------------------------------------------------
+# SPMD mirror — apply a BalanceDecision inside jit/shard_map
+# ---------------------------------------------------------------------------
+def moves_to_matrix(decision: BalanceDecision, n: int) -> np.ndarray:
+    """(n, n) int32 matrix M with M[s, d] = entries s ships to d."""
+    m = np.zeros((n, n), np.int32)
+    for s, d, c in decision.moves:
+        m[s, d] += c
+    return m
+
+
+def spmd_rebalance(x, valid, move_matrix, *, axis_name: str, capacity: int):
+    """Device-side GLB: shuffle rows between shards per ``move_matrix``.
+
+    Each shard reads its row of the (n, n) move matrix, assigns its
+    first ``sum(row)`` valid rows to the planned destinations (in rank
+    order), keeps the rest, and runs one capacity-masked
+    ``lax.all_to_all`` via :func:`spmd_relocate`.  The input validity
+    mask rides along as an extra so padding rows never materialize as
+    real entries.  Returns ``(new_rows, new_valid)`` with shapes
+    ``(n_shards*capacity, ...)`` / ``(n_shards*capacity,)``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..compat import axis_size
+    from .relocation import spmd_relocate
+
+    n = axis_size(axis_name)
+    me = jax.lax.axis_index(axis_name)
+    row = jnp.asarray(move_matrix, jnp.int32)[me]          # (n,)
+    bounds = jnp.cumsum(row)
+    total_out = bounds[-1]
+    validb = valid.astype(bool)
+    rank = jnp.cumsum(validb.astype(jnp.int32)) - 1        # rank among valid
+    planned = jnp.searchsorted(bounds, rank, side="right").astype(jnp.int32)
+    outgoing = validb & (rank < total_out)
+    # padding rows route to the out-of-range destination `n`, which
+    # _pack_by_dest maps past the drop sentinel — they must not compete
+    # with real rows for the self-destination's capacity
+    dest = jnp.where(outgoing, jnp.minimum(planned, n - 1),
+                     jnp.where(validb, me, n))
+    out = spmd_relocate(x, dest, axis_name=axis_name, capacity=capacity,
+                        extras=(validb.astype(jnp.int32),))
+    new_valid = out["recv_valid"] & (out["recv_extras"][0] > 0)
+    return out["recv"], new_valid
+
+
+# ---------------------------------------------------------------------------
+# Synthetic-cluster harness (paper §6.3: even / uneven / disturbed)
+# ---------------------------------------------------------------------------
+@dataclass
+class ClusterSim:
+    """A simulated cluster driving a GLB over a DistArray of work items.
+
+    Place p processes an entry in ``1/speeds[p]`` time units; the
+    "Disturb" parasite (paper §6.3) slows one host by ``disturb_factor``
+    and moves to the next every ``disturb_period`` iterations.  One
+    ``run()`` iteration = parallel compute (makespan = slowest place) +
+    GLB accounting/step — the loop structure of the paper's Listing 7.
+    """
+
+    n_places: int
+    n_entries: int = 1200
+    speeds: tuple = ()
+    disturb_period: int = 0
+    disturb_factor: float = 0.4
+    glb: GLBConfig | None = None
+    seed: int = 0
+
+    def __post_init__(self):
+        from .distribution import LongRange
+        self.group = PlaceGroup(self.n_places)
+        self.col = DistArray(self.group, track=True)
+        rows = np.arange(self.n_entries, dtype=np.float64)[:, None]
+        for p, r in enumerate(
+                LongRange(0, self.n_entries).split(self.n_places)):
+            if r.size:
+                self.col.add_chunk(p, r, rows[r.start:r.end])
+        if not self.speeds:
+            self.speeds = (1.0,) * self.n_places
+        self.balancer = None
+        if self.glb is not None:
+            self.balancer = GlobalLoadBalancer(
+                self.group, DistArrayWorkload(self.col), self.glb)
+        self.iter = 0
+        self.makespans: list[float] = []
+
+    def _speed(self, p: int) -> float:
+        s = self.speeds[p]
+        if self.disturb_period:
+            victim = (self.iter // self.disturb_period) % self.n_places
+            if p == victim:
+                s *= self.disturb_factor
+        return s
+
+    def run(self, iters: int) -> float:
+        """Simulated wall time of ``iters`` iterations."""
+        for _ in range(iters):
+            if self.balancer is not None:
+                # settle the previous window before reading loads (its
+                # phase 1 extracts entries on a background thread)
+                self.balancer.finish()
+            loads = np.asarray(
+                [self.col.local_size(p) for p in self.group.members],
+                np.float64)
+            t = loads / np.asarray([self._speed(p)
+                                    for p in self.group.members])
+            self.makespans.append(float(t.max()))
+            if self.balancer is not None:
+                self.balancer.record_all(np.maximum(t, 1e-9))
+                self.balancer.step()
+            self.iter += 1
+        if self.balancer is not None:
+            self.balancer.finish()
+        return float(np.sum(self.makespans[-iters:]))

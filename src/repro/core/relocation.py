@@ -21,6 +21,8 @@ Two halves, mirroring the paper's design:
 """
 from __future__ import annotations
 
+import threading
+import time
 from dataclasses import dataclass, field
 from functools import partial
 from typing import Any, Callable
@@ -29,10 +31,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..compat import axis_size
 from .collections import DistArray, DistBag, DistMap, PlaceGroup
 from .distribution import LongRange
 
 __all__ = [
+    "AsyncRelocation",
     "CollectiveMoveManager",
     "spmd_relocate",
     "spmd_relocate_back",
@@ -121,18 +125,46 @@ class CollectiveMoveManager:
 
     # -- the teamed sync ---------------------------------------------------
     def sync(self) -> None:
-        """Execute all registered moves.
+        """Execute all registered moves synchronously.
 
         Phase 1 (Alltoall): build the place×place byte-count matrix.
         Phase 2 (Alltoallv): move the payloads and insert at destination.
         """
+        self.sync_async().finish()
+
+    def sync_async(self, update_dists: tuple = ()) -> "AsyncRelocation":
+        """Split the §5.3 two-phase exchange so phase 1 — the counts
+        Alltoall plus payload extraction/packing — runs on a background
+        thread while the caller keeps computing (the paper's 'relocation
+        overlaps the master's critical path', §4.5).
+
+        Registered moves are snapshotted and cleared, so the caller may
+        register the *next* window's moves immediately.  Call
+        :meth:`AsyncRelocation.finish` to run phase 2 (delivery) and, if
+        ``update_dists`` collections were given, reconcile their
+        distributions via ``update_dist``.
+        """
+        moves = (tuple(self._range_moves), tuple(self._array_count_moves),
+                 tuple(self._bag_moves), tuple(self._key_moves))
+        self._range_moves = []
+        self._array_count_moves = []
+        self._bag_moves = []
+        self._key_moves = []
+        return AsyncRelocation(self, moves, tuple(update_dists))
+
+    def _phase1(self, moves) -> tuple[np.ndarray, list]:
+        """Counts Alltoall + payload packing (runs off-thread under
+        :meth:`sync_async`).  Extraction happens here: entries leave the
+        source handles as soon as phase 1 runs, exactly like the eager
+        serialization of the paper's implementation."""
+        range_moves, array_count_moves, bag_moves, key_moves = moves
         n = self.group.size()
         place_index = {p: i for i, p in enumerate(self.group.members)}
         counts = np.zeros((n, n), dtype=np.int64)
         payloads: list[tuple[Any, int, int, Any]] = []  # (col, src, dest, payload)
 
         # Range moves: find the current holder, extract (splitting chunks).
-        for m in self._range_moves:
+        for m in range_moves:
             src = None
             for p in self.group.members:
                 held = any(cr.overlaps(m.r) for cr in m.collection.ranges(p))
@@ -147,7 +179,7 @@ class CollectiveMoveManager:
             counts[place_index[src], place_index[m.dest]] += nb
             payloads.append((m.collection, src, m.dest, payload))
 
-        for m in self._array_count_moves:
+        for m in array_count_moves:
             remaining = m.count
             for r in list(m.collection.ranges(m.src)):
                 if remaining <= 0:
@@ -164,13 +196,13 @@ class CollectiveMoveManager:
                 raise ValueError(
                     f"place {m.src} holds fewer than {m.count} entries")
 
-        for m in self._bag_moves:
+        for m in bag_moves:
             payload = m.collection._extract_count(m.src, m.count)
             nb = m.collection._payload_nbytes(payload)
             counts[place_index[m.src], place_index[m.dest]] += nb
             payloads.append((m.collection, m.src, m.dest, payload))
 
-        for m in self._key_moves:
+        for m in key_moves:
             by_dest: dict[int, list] = {}
             for k in m.collection.keys(m.src):
                 d = m.rule(k)
@@ -184,8 +216,11 @@ class CollectiveMoveManager:
                 counts[place_index[m.src], place_index[d]] += nb
                 payloads.append((m.collection, m.src, d, payload))
 
-        # Phase 2: deliver. (Host model: direct insertion; on device the
-        # equivalent is spmd_relocate below.)
+        return counts, payloads
+
+    def _deliver(self, counts: np.ndarray, payloads: list) -> int:
+        """Phase 2: deliver. (Host model: direct insertion; on device the
+        equivalent is spmd_relocate below.)"""
         moved_bytes = 0
         for col, src, dest, payload in payloads:
             if src != dest:
@@ -196,10 +231,80 @@ class CollectiveMoveManager:
         self.last_counts_matrix = counts
         self.last_payload_bytes = moved_bytes
         self.syncs += 1
-        self._range_moves.clear()
-        self._bag_moves.clear()
-        self._key_moves.clear()
-        self._array_count_moves.clear()
+        return moved_bytes
+
+
+class AsyncRelocation:
+    """An in-flight teamed relocation started by
+    :meth:`CollectiveMoveManager.sync_async`.
+
+    Phase 1 (counts Alltoall + payload packing) runs on a daemon thread;
+    :meth:`finish` is the teamed barrier that joins it, delivers the
+    payloads (phase 2) and reconciles tracked distributions.  ``trace``
+    holds host-side timestamps so benchmarks can verify that phase 1
+    overlapped the caller's compute (``t_counts_ready < t_finish_enter``).
+    """
+
+    def __init__(self, manager: CollectiveMoveManager, moves,
+                 update_dists: tuple):
+        self.manager = manager
+        self._update_dists = update_dists
+        self._counts: np.ndarray | None = None
+        self._payloads: list | None = None
+        self._exc: BaseException | None = None
+        self._counts_ready = threading.Event()
+        self.finished = False
+        self.trace: dict[str, float] = {"t_submit": time.perf_counter()}
+        self._thread = threading.Thread(
+            target=self._run_phase1, args=(moves,), daemon=True)
+        self._thread.start()
+
+    def _run_phase1(self, moves) -> None:
+        try:
+            self._counts, self._payloads = self.manager._phase1(moves)
+        except BaseException as e:  # re-raised at the finish() barrier
+            self._exc = e
+        finally:
+            self.trace["t_counts_ready"] = time.perf_counter()
+            self._counts_ready.set()
+
+    # -- phase-1 observers -------------------------------------------------
+    def counts_ready(self) -> bool:
+        """True once the counts exchange completed (non-blocking)."""
+        return self._counts_ready.is_set()
+
+    def wait_counts(self, timeout: float | None = None) -> np.ndarray | None:
+        """Block until the place×place byte-count matrix is available —
+        the phase-1 Alltoall result, usable for flow control before the
+        payload exchange lands."""
+        self._counts_ready.wait(timeout)
+        if self._exc is not None:
+            raise self._exc
+        return self._counts
+
+    @property
+    def overlapped(self) -> bool:
+        """Did phase 1 complete before the caller reached the barrier?"""
+        return ("t_finish_enter" in self.trace
+                and self.trace["t_counts_ready"]
+                <= self.trace["t_finish_enter"])
+
+    # -- the barrier -------------------------------------------------------
+    def finish(self) -> "AsyncRelocation":
+        """Teamed barrier: join phase 1, deliver payloads, reconcile the
+        distributions of any ``update_dists`` collections."""
+        if self.finished:
+            return self
+        self.trace["t_finish_enter"] = time.perf_counter()
+        self._thread.join()
+        if self._exc is not None:
+            raise self._exc
+        self.manager._deliver(self._counts, self._payloads)
+        for col in self._update_dists:
+            col.update_dist()
+        self.trace["t_done"] = time.perf_counter()
+        self.finished = True
+        return self
 
 
 # ---------------------------------------------------------------------------
@@ -260,7 +365,7 @@ def spmd_relocate(x: jnp.ndarray, dest: jnp.ndarray, *, axis_name: str,
       slot: (n,) flat slot each local row was packed into (-1 = dropped)
       recv_extras: relocated extras
     """
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = axis_size(axis_name)
     buf, valid, slot = _pack_by_dest(x, dest, n_shards, capacity)
     recv = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=False)
     recv_valid = jax.lax.all_to_all(valid.astype(jnp.int8), axis_name, 0, 0,
@@ -293,7 +398,7 @@ def spmd_relocate_back(y: jnp.ndarray, slot: jnp.ndarray, *, axis_name: str,
     the MoE combine).  ``y`` is (n_shards*capacity, ...) in the same
     layout produced by :func:`spmd_relocate`; ``slot`` is the slot map
     returned by it."""
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = axis_size(axis_name)
     buf = y.reshape((n_shards, capacity) + y.shape[1:])
     back = jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=False)
     flat = back.reshape((n_shards * capacity,) + y.shape[1:])

@@ -19,6 +19,8 @@ from typing import Any, Callable, Protocol, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from ..compat import axis_size
 import numpy as np
 
 from .collections import DistArray, PlaceGroup
@@ -97,7 +99,7 @@ def spmd_team_reduce(local_state: Any, reducer: Reducer, axis_name: str) -> Any:
     if getattr(reducer, "additive", False):
         return jax.tree_util.tree_map(
             lambda x: jax.lax.psum(x, axis_name), local_state)
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     gathered = jax.tree_util.tree_map(
         lambda x: jax.lax.all_gather(x, axis_name, axis=0), local_state)
 

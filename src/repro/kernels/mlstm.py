@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 __all__ = ["mlstm_chunkwise"]
 
 NEG_INF = float("-inf")
@@ -157,7 +159,7 @@ def mlstm_chunkwise(q, k, v, i_gate, f_gate, *, block_s: int = 64,
             pltpu.VMEM((d,), jnp.float32),
             pltpu.VMEM((1,), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
         name="mlstm_chunkwise",

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..compat import tpu_compiler_params
+
 __all__ = ["rg_lru"]
 
 
@@ -95,7 +97,7 @@ def rg_lru(x, a, h0=None, *, block_s: int = 128, block_d: int = 128,
             jax.ShapeDtypeStruct((B, Dp), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((block_d,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name="rg_lru",

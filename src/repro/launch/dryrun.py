@@ -32,6 +32,8 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+
+from ..compat import set_mesh
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
@@ -108,7 +110,7 @@ def lower_cell(arch: str, cell, multi_pod: bool, *, remat: str | None = None,
                 return jax.ShapeDtypeStruct(
                     (accum, s.shape[0] // accum) + s.shape[1:], s.dtype)
             bspec = {k: split(k, v) for k, v in bspec.items()}
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = step.lower(pshape, oshape, bspec)
     elif cell.kind == "prefill":
         pshape = zoo.abstract_params(cfg)
@@ -118,7 +120,7 @@ def lower_cell(arch: str, cell, multi_pod: bool, *, remat: str | None = None,
         jfn = jax.jit(fn, in_shardings=(_sharding_tree(mesh, pspecs),
                                         _sharding_tree(mesh, bspecs)))
         specs = zoo.input_specs(cfg, cell, par)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jfn.lower(pshape, specs["batch"])
     else:  # decode
         pshape = zoo.abstract_params(cfg)
@@ -138,7 +140,7 @@ def lower_cell(arch: str, cell, multi_pod: bool, *, remat: str | None = None,
                                      NamedSharding(mesh, logits_spec)),
                       donate_argnums=(1,))
         specs = zoo.input_specs(cfg, cell, par)
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             lowered = jfn.lower(pshape, specs["state"], specs["token_ids"])
     return cfg, lowered, n_devices
 

@@ -13,9 +13,8 @@ __all__ = ["make_production_mesh", "make_parallel"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    from ..compat import make_mesh
+    return make_mesh(shape, axes)
 
 
 def make_parallel(mesh, *, fsdp: bool = False, seq_shard_decode: bool = False):

@@ -22,6 +22,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
+
 from ..core.relocation import _pack_by_dest
 from .config import ModelConfig
 from .layers import dense, dense_init, rmsnorm, rmsnorm_init, rope, swiglu, swiglu_init
@@ -129,7 +131,7 @@ def expert_all_to_all(router_p, local_bank, shared_p, cfg: ModelConfig, x, *,
     """
     T, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = axis_size(axis_name)
     eps = E // n_shards                     # experts per shard
     cap = max(1, int(cfg.capacity_factor * T * K / E))
 
@@ -174,7 +176,7 @@ def expert_replicated(router_p, local_bank, shared_p, cfg: ModelConfig, x, *,
     trade when T_local is tiny, e.g. one decode token per sequence)."""
     T, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
-    n_shards = jax.lax.axis_size(axis_name)
+    n_shards = axis_size(axis_name)
     eps = E // n_shards
     cap = max(int(2 * cfg.capacity_factor * T * K / n_shards), min(T, 64))
 

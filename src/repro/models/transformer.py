@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import pcast_varying, shard_map
+
 from .attention import (attn_attend_cache, attn_decode,
                         attn_decode_project, attn_forward, attn_init)
 from .config import LayerSlot, ModelConfig
@@ -113,7 +115,7 @@ def _moe_apply(p_moe, cfg: ModelConfig, par: Parallel, x, *, decode: bool):
                 lambda a: jax.lax.pmean(a, par.all_axes), aux)
             return out, aux
 
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             body, mesh=par.mesh,
             in_specs=(P(), P(axis), spec_tok),
             out_specs=(spec_tok, P()))(router, bank, xt)
@@ -130,7 +132,7 @@ def _moe_apply(p_moe, cfg: ModelConfig, par: Parallel, x, *, decode: bool):
                 lambda a: jax.lax.pmean(a, par.batch_axes), aux)
             return out, aux
 
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             body, mesh=par.mesh,
             in_specs=(P(), P(axis), spec_tok),
             out_specs=(spec_tok, P()))(router, bank, xt)
@@ -504,7 +506,7 @@ def lm_loss(params, cfg: ModelConfig, par: Parallel, h, labels, mask=None):
         h_c = hh.reshape(Bl, n_chunks, chunk, d).transpose(1, 0, 2, 3)
         l_c = ll.reshape(Bl, n_chunks, chunk).transpose(1, 0, 2)
         m_c = mm.reshape(Bl, n_chunks, chunk).transpose(1, 0, 2)
-        zero = jax.lax.pcast(jnp.zeros((), jnp.float32),
+        zero = pcast_varying(jnp.zeros((), jnp.float32),
                              tuple(par.batch_axes), to="varying")
         tot, _ = jax.lax.scan(jax.checkpoint(chunk_loss), zero,
                               (h_c, l_c, m_c))
@@ -512,7 +514,7 @@ def lm_loss(params, cfg: ModelConfig, par: Parallel, h, labels, mask=None):
         cnt = jax.lax.psum(jnp.sum(mm), par.batch_axes)
         return tot / jnp.maximum(cnt, 1.0)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=par.mesh,
         in_specs=(P(axis, None), par.batch_spec(None, None),
                   par.batch_spec(None), par.batch_spec(None)),

@@ -13,6 +13,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
+
 __all__ = ["ef_init", "compressed_psum"]
 
 
@@ -29,7 +31,7 @@ def compressed_psum(grads, ef_state, axis_name):
     abs-max — one scalar allreduce per tensor), so the summed int8
     payload dequantizes exactly: the only error is each shard's local
     rounding, which the error-feedback state re-injects next round."""
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
 
     def one(g, e):
         x = g.astype(jnp.float32) + e

@@ -1,0 +1,76 @@
+"""Property-test shim: real ``hypothesis`` when installed, otherwise a
+tiny deterministic sampler.
+
+Tier-1 must collect and run on a clean interpreter (no dev deps), so the
+test modules import ``given/settings/st`` from here instead of hard-
+importing hypothesis.  The fallback draws ``max_examples`` examples per
+test from seeded numpy generators — no shrinking, but reproducible: a
+failure reports the seed and the drawn example.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=10):
+            def sample(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.sample(rng) for _ in range(n)]
+
+            return _Strategy(sample)
+
+        @staticmethod
+        def tuples(*elements):
+            return _Strategy(
+                lambda rng: tuple(e.sample(rng) for e in elements))
+
+    class settings:  # noqa: N801 - mimics `hypothesis.settings`
+        def __init__(self, max_examples=20, deadline=None, **_kw):
+            self.max_examples = max_examples
+
+        def __call__(self, fn):
+            fn._max_examples = self.max_examples
+            return fn
+
+    def given(**strategies):
+        def deco(fn):
+            # no functools.wraps: __wrapped__ would expose the original
+            # signature and pytest would treat drawn params as fixtures
+            def run(*args):
+                n = getattr(run, "_max_examples", 20)
+                for seed in range(n):
+                    rng = np.random.default_rng(1_000_003 * seed + 17)
+                    kw = {k: s.sample(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **kw)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (seed={seed}): {kw!r}") from e
+
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            return run
+
+        return deco

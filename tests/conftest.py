@@ -1,0 +1,16 @@
+"""Test-suite bootstrap: make ``repro`` importable without an exported
+PYTHONPATH and keep marker registration in one place (pytest.ini holds
+the canonical list; this guards direct ``pytest tests/...`` runs from
+other rootdirs)."""
+import sys
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-minute tier (subprocess SPMD tests, arch sweeps)")

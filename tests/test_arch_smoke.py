@@ -10,6 +10,8 @@ import pytest
 from repro.configs import ARCH_IDS, get_config
 from repro.models import Parallel, zoo
 from repro.models import transformer as T
+
+pytestmark = pytest.mark.slow  # full arch sweep jit-compiles for minutes
 from repro.optim.adamw import AdamWConfig, adamw_init
 from repro.train.step import build_train_step
 

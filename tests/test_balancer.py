@@ -1,6 +1,7 @@
 """Load-balancer semantics: paper §4.5 / §6.3 claims."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core import (BalanceDecision, LevelExtremes, LoadBalancer,
                         Proportional)

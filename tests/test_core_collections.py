@@ -1,7 +1,8 @@
 """Core relocatable-collection semantics (paper §3–§5)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st
 
 from repro.core import (
     Accumulator, CachableArray, CachableChunkedList, CollectiveMoveManager,

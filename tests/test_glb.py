@@ -1,0 +1,374 @@
+"""GLB subsystem: lifelines, async relocation, conservation, byte
+accounting, convergence on the paper's cluster profiles (§6.3), and the
+SPMD mirror (slow tier)."""
+import subprocess
+import sys
+import textwrap
+import time
+
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import (
+    AsyncRelocation, ClusterSim, CollectiveMoveManager, DistArray,
+    DistArrayWorkload, GLBConfig, GlobalLoadBalancer, ListWorkload,
+    LongRange, PlaceGroup, hypercube_lifelines, moves_to_matrix,
+    ring_lifelines,
+)
+from repro.core.balancer import BalanceDecision
+
+
+def make_col(n_places=4, n=120, width=2, skew=None):
+    g = PlaceGroup(n_places)
+    col = DistArray(g, track=True)
+    if skew is None:
+        parts = LongRange(0, n).split(n_places)
+        for p, r in enumerate(parts):
+            if r.size:
+                col.add_chunk(p, r, np.arange(r.start, r.end)[:, None]
+                              * np.ones((1, width)))
+    else:  # everything on place `skew`
+        col.add_chunk(skew, LongRange(0, n),
+                      np.arange(n)[:, None] * np.ones((1, width)))
+        for p in range(n_places):
+            col.handle(p)
+    return g, col
+
+
+def entry_multiset(col, n):
+    """All first-column values across places, sorted — duplication or
+    loss of any entry changes this."""
+    vals = []
+    for p in col.group.members:
+        rows, _ = col.to_local_matrix(p)
+        if len(rows):
+            vals.extend(np.asarray(rows)[:, 0].tolist())
+    return sorted(vals)
+
+
+# ---------------------------------------------------------------------------
+# lifeline graphs
+# ---------------------------------------------------------------------------
+class TestLifelines:
+    @pytest.mark.parametrize("n", [1, 2, 3, 5, 8, 13, 16])
+    def test_ring_connected(self, n):
+        g = ring_lifelines(n)
+        seen, cur = {0}, 0
+        for _ in range(n):
+            if g[cur]:
+                cur = g[cur][0]
+                seen.add(cur)
+        assert seen == set(range(n))
+
+    @pytest.mark.parametrize("n", [2, 3, 5, 8, 13, 16])
+    def test_hypercube_reaches_everyone_fast(self, n):
+        g = hypercube_lifelines(n)
+        # BFS depth from 0 must be <= ceil(log2 n)
+        depth = {0: 0}
+        frontier = [0]
+        while frontier:
+            nxt = []
+            for u in frontier:
+                for v in g[u]:
+                    if v not in depth:
+                        depth[v] = depth[u] + 1
+                        nxt.append(v)
+            frontier = nxt
+        assert set(depth) == set(range(n))
+        assert max(depth.values()) <= max(1, (n - 1).bit_length())
+
+    def test_hypercube_symmetric(self):
+        g = hypercube_lifelines(8)
+        for u, nbrs in g.items():
+            for v in nbrs:
+                assert u in g[v]
+
+
+# ---------------------------------------------------------------------------
+# async relocation pipeline
+# ---------------------------------------------------------------------------
+class TestAsyncRelocation:
+    def test_matches_sync_result(self):
+        g1, c1 = make_col()
+        g2, c2 = make_col()
+        mm1, mm2 = CollectiveMoveManager(g1), CollectiveMoveManager(g2)
+        c1.move_range_at_sync(LongRange(5, 25), 3, mm1)
+        c2.move_range_at_sync(LongRange(5, 25), 3, mm2)
+        mm1.sync()
+        h = mm2.sync_async(update_dists=(c2,)).finish()
+        assert np.array_equal(mm1.last_counts_matrix, mm2.last_counts_matrix)
+        assert mm1.last_payload_bytes == mm2.last_payload_bytes
+        assert entry_multiset(c1, 120) == entry_multiset(c2, 120)
+        assert c2.get_distribution().owner_of(10) == 3
+
+    def test_counts_overlap_caller_compute(self):
+        g, col = make_col(n=2000)
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(0, 200, 2, mm)
+        h = mm.sync_async()
+        counts = h.wait_counts(timeout=5.0)   # phase 1, pre-barrier
+        assert counts is not None and counts.sum() > 0
+        time.sleep(0.005)                     # "caller compute"
+        h.finish()
+        assert h.overlapped
+        assert h.trace["t_counts_ready"] <= h.trace["t_finish_enter"]
+
+    def test_registration_clears_at_submit(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(0, 5, 1, mm)
+        h = mm.sync_async()
+        assert mm.pending() == 0              # next window registers freely
+        col.move_at_sync_count(1, 5, 2, mm)
+        h.finish()
+        assert mm.pending() == 1              # untouched by the finish
+
+    def test_error_propagates_at_barrier(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(0, 10_000, 1, mm)   # more than place 0 holds
+        h = mm.sync_async()
+        with pytest.raises(ValueError):
+            h.finish()
+
+    def test_finish_idempotent(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(0, 5, 1, mm)
+        h = mm.sync_async()
+        h.finish()
+        syncs = mm.syncs
+        h.finish()
+        assert mm.syncs == syncs
+
+
+# ---------------------------------------------------------------------------
+# byte accounting
+# ---------------------------------------------------------------------------
+class TestCommStats:
+    def test_comm_bytes_match_payloads(self):
+        g, col = make_col(n=400, width=4)
+        before = col.comm.bytes_moved
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(0, 50, 3, mm)
+        mm.sync()
+        # payload = 50 rows x 4 float64 lanes + 16B header
+        assert mm.last_payload_bytes == 50 * 4 * 8 + 16
+        assert col.comm.bytes_moved - before == mm.last_payload_bytes
+        assert np.asarray(mm.last_counts_matrix).sum() == mm.last_payload_bytes
+
+    def test_glb_accounts_rebalance_bytes(self):
+        g, col = make_col(n=400, width=4, skew=0)
+        glb = GlobalLoadBalancer(
+            g, DistArrayWorkload(col),
+            GLBConfig(period=1, policy="proportional", asynchronous=False))
+        before = col.comm.bytes_moved
+        glb.record_all([4.0, 1.0, 1.0, 1.0])
+        glb.step()
+        glb.finish()
+        moved = glb.stats.entries_rebalanced
+        assert moved > 0
+        assert glb.stats.bytes_moved >= moved * 4 * 8  # >= payload rows
+        # comm counter includes update_dist delta traffic on top
+        assert col.comm.bytes_moved - before >= glb.stats.bytes_moved
+
+
+# ---------------------------------------------------------------------------
+# conservation + convergence (paper §6.3 profiles)
+# ---------------------------------------------------------------------------
+class TestConvergence:
+    def test_even_cluster_no_overhead(self):
+        sim = ClusterSim(8, 1600, glb=GLBConfig(period=5), seed=0)
+        sim.run(100)
+        assert sim.balancer.stats.rebalances == 0  # nothing to fix
+
+    def test_uneven_cluster_converges(self):
+        speeds = (1, 1, 1, 1, 1, 1, 1, 3)
+        sim = ClusterSim(8, 2000, speeds=speeds,
+                         glb=GLBConfig(period=5, policy="proportional"),
+                         seed=0)
+        sim.run(150)
+        opt = 2000 / sum(speeds)
+        assert sim.makespans[-1] < opt * 1.15
+        loads = [sim.col.local_size(p) for p in sim.group.members]
+        assert loads[-1] > 2.0 * loads[0]       # fast host holds ~3x
+        assert sim.col.global_size() == 2000    # conservation
+
+    def test_disturbed_cluster_recovers_2x(self):
+        kw = dict(n_places=8, n_entries=1600, disturb_period=40,
+                  disturb_factor=0.2, seed=0)
+        base = ClusterSim(**kw).run(200)
+        sim = ClusterSim(glb=GLBConfig(period=5, policy="proportional"), **kw)
+        t = sim.run(200)
+        assert base / t >= 2.0, (base, t)
+        assert sim.col.global_size() == 1600
+
+    def test_overlap_observed_in_trace(self):
+        sim = ClusterSim(4, 1200, speeds=(1, 1, 1, 3),
+                         glb=GLBConfig(period=5), seed=0)
+        sim.run(60)
+        st_ = sim.balancer.stats
+        assert st_.syncs_total > 0
+        assert st_.overlap_fraction > 0.5
+        tr = sim.balancer.last_trace
+        assert tr["t_counts_ready"] <= tr["t_finish_enter"]
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(40, 400), n_places=st.integers(2, 8),
+       fast=st.integers(0, 7), period=st.integers(1, 6))
+def test_property_glb_conserves_entries(n, n_places, fast, period):
+    """Any GLB run conserves the multiset of entries exactly — no
+    duplicated or dropped keys."""
+    speeds = [1.0] * n_places
+    speeds[fast % n_places] = 3.0
+    sim = ClusterSim(n_places, n, speeds=tuple(speeds),
+                     glb=GLBConfig(period=period, policy="proportional"),
+                     seed=0)
+    before = entry_multiset(sim.col, n)
+    sim.run(30)
+    assert sim.col.global_size() == n
+    assert entry_multiset(sim.col, n) == before
+    assert sim.col.get_distribution().total == n
+
+
+# ---------------------------------------------------------------------------
+# lifeline stealing
+# ---------------------------------------------------------------------------
+class TestStealing:
+    @pytest.mark.parametrize("topo", ["ring", "hypercube"])
+    def test_idle_places_acquire_work(self, topo):
+        g, col = make_col(n_places=8, n=800, skew=0)
+        glb = GlobalLoadBalancer(
+            g, DistArrayWorkload(col), GLBConfig(lifeline=topo))
+        for _ in range(6):
+            glb.steal_pass()
+        loads = np.asarray([col.local_size(p) for p in g.members])
+        assert (loads > 0).all()
+        assert col.global_size() == 800
+        assert glb.stats.steals_served > 0
+
+    def test_termination_detected_when_no_work(self):
+        g = PlaceGroup(4)
+        col = DistArray(g, track=True)
+        for p in g.members:
+            col.handle(p)                      # all empty
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col), GLBConfig())
+        assert glb.steal_pass() == 0
+        assert glb.is_terminated()
+
+    def test_min_keep_propagates_to_rebalance(self):
+        g, col = make_col(n_places=2, n=40, skew=0)
+        glb = GlobalLoadBalancer(
+            g, DistArrayWorkload(col),
+            GLBConfig(period=1, policy="proportional", min_keep=30,
+                      asynchronous=False))
+        glb.record_all([10.0, 0.1])
+        glb.step()
+        glb.finish()
+        assert col.local_size(0) >= 30      # config floor honored
+        assert glb.stats.entries_rebalanced == 40 - col.local_size(0)
+
+    def test_stats_count_actual_not_planned(self):
+        g, col = make_col(n_places=2, n=10, skew=0)
+        glb = GlobalLoadBalancer(
+            g, DistArrayWorkload(col),
+            GLBConfig(period=1, asynchronous=False))
+        # policy will plan moves, but only 9 entries can leave (min_keep=1)
+        glb.record_all([100.0, 0.1])
+        glb.step()
+        glb.finish()
+        assert glb.stats.entries_rebalanced <= 9
+        assert glb.stats.entries_rebalanced == 10 - col.local_size(0)
+
+    def test_steal_conserves_list_workload(self):
+        lists = [[("tile", i) for i in range(60)], [], [], []]
+        wl = ListWorkload(lists)
+        glb = GlobalLoadBalancer(4, wl, GLBConfig(lifeline="hypercube"))
+        for _ in range(5):
+            glb.steal_pass()
+        assert sum(len(x) for x in wl.lists) == 60
+        assert all(len(x) > 0 for x in wl.lists)
+
+
+# ---------------------------------------------------------------------------
+# device-side mirror
+# ---------------------------------------------------------------------------
+def test_moves_to_matrix():
+    d = BalanceDecision(((0, 1, 5), (0, 2, 3), (3, 1, 2)))
+    m = moves_to_matrix(d, 4)
+    assert m[0, 1] == 5 and m[0, 2] == 3 and m[3, 1] == 2
+    assert m.sum() == d.total_moved
+
+
+@pytest.mark.slow
+def test_spmd_rebalance_conserves_rows():
+    """spmd_rebalance = capacity-masked all_to_all: the multiset of valid
+    rows is preserved and lands on the planned shards."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core import spmd_rebalance, moves_to_matrix
+        from repro.core.balancer import BalanceDecision
+
+        mesh = make_mesh((8,), ("x",))
+        cap = 16
+        rows_per = 8
+        x = np.arange(8 * rows_per, dtype=np.float32)[:, None] * np.ones(
+            (1, 3), np.float32) + 1.0
+        valid = np.ones((8 * rows_per,), np.int32)
+        decision = BalanceDecision(((0, 4, 5), (1, 2, 3), (7, 0, 2)))
+        M = moves_to_matrix(decision, 8)
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("x"), P("x")),
+                 out_specs=(P("x"), P("x")))
+        def f(xl, vl):
+            out, nv = spmd_rebalance(xl, vl, M, axis_name="x", capacity=cap)
+            return out, nv.astype(jnp.int32)
+
+        out, nv = f(x, valid)
+        out = np.asarray(out).reshape(8, 8 * cap, 3)
+        nv = np.asarray(nv).reshape(8, 8 * cap).astype(bool)
+        got = sorted(out[nv][:, 0].tolist())
+        assert got == sorted(x[:, 0].tolist()), "rows not conserved"
+        per_shard = nv.sum(1)
+        assert per_shard[0] == rows_per - 5 + 2
+        assert per_shard[4] == rows_per + 5
+        assert per_shard[2] == rows_per + 3
+        assert per_shard[7] == rows_per - 2
+
+        # sparse-valid regression: 16 slots/shard but only 8 valid,
+        # interleaved with padding, capacity 8 == valid count.  Padding
+        # must not compete with real rows for self-capacity.
+        slots, cap2 = 16, 8
+        x2 = np.arange(8 * slots, dtype=np.float32)[:, None] * np.ones(
+            (1, 3), np.float32) + 1.0
+        v2 = np.tile(np.array([0, 1], np.int32), 8 * slots // 2)
+        M0 = np.zeros((8, 8), np.int32)
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("x"), P("x")),
+                 out_specs=(P("x"), P("x")))
+        def g(xl, vl):
+            out, nv = spmd_rebalance(xl, vl, M0, axis_name="x",
+                                     capacity=cap2)
+            return out, nv.astype(jnp.int32)
+
+        out2, nv2 = g(x2, v2)
+        nv2 = np.asarray(nv2).astype(bool)
+        got2 = sorted(np.asarray(out2)[nv2][:, 0].tolist())
+        assert got2 == sorted(x2[v2.astype(bool)][:, 0].tolist()), \
+            "padding displaced valid rows"
+        print("ok")
+    """)
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ok" in out.stdout

@@ -9,6 +9,8 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # subprocess-spawning, multi-minute tier
+
 
 def run_spmd(body: str) -> str:
     script = textwrap.dedent("""
@@ -20,8 +22,8 @@ def run_spmd(body: str) -> str:
         import numpy as np
         from functools import partial
         from jax.sharding import PartitionSpec as P
-        mesh = jax.make_mesh((8,), ("x",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh, set_mesh, shard_map
+        mesh = make_mesh((8,), ("x",))
     """) + textwrap.dedent(body)
     out = subprocess.run([sys.executable, "-c", script], capture_output=True,
                          text=True, timeout=600)
@@ -35,7 +37,7 @@ def test_spmd_relocate_roundtrip():
         rng = np.random.default_rng(0)
         x = rng.normal(size=(128, 4)).astype(np.float32)
         dest = rng.integers(0, 8, size=(128,)).astype(np.int32)
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("x"), P("x")),
+        @partial(shard_map, mesh=mesh, in_specs=(P("x"), P("x")),
                  out_specs=P("x"))
         def roundtrip(xl, dl):
             out = spmd_relocate(xl, dl, axis_name="x", capacity=32)
@@ -53,7 +55,7 @@ def test_spmd_team_reduce_monoid():
             additive = False
             def merge(self, a, b):
                 return jnp.maximum(a, b)
-        @partial(jax.shard_map, mesh=mesh, in_specs=P("x"), out_specs=P())
+        @partial(shard_map, mesh=mesh, in_specs=P("x"), out_specs=P())
         def f(x):
             local = jnp.max(x)
             return spmd_team_reduce(local, MaxR(), "x")
@@ -76,7 +78,7 @@ def test_spmd_moe_all_to_all_matches_dense():
         rng = np.random.default_rng(0)
         x = rng.normal(size=(128, 32)).astype(np.float32)
         dense_out, aux = moe_forward_dense(params, cfg, x[None])
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=(P(), P("x"), P("x")), out_specs=P("x"))
         def ep(router, bank, t):
             out, aux = expert_all_to_all(router, bank, None, cfg, t,
@@ -102,7 +104,7 @@ def test_spmd_seq_parallel_decode_attention():
         cur = np.full((B, 1), 40, np.int32)
         kn = rng.normal(size=(B, Hkv, hd)).astype(np.float32)
         vn = rng.normal(size=(B, Hkv, hd)).astype(np.float32)
-        @partial(jax.shard_map, mesh=mesh,
+        @partial(shard_map, mesh=mesh,
                  in_specs=(P(), P(None, "x"), P(None, "x"), P(None, "x"),
                            P(), P(), P()),
                  out_specs=P())
@@ -129,7 +131,7 @@ def test_spmd_compressed_psum_error_feedback():
         from repro.optim.compress import compressed_psum, ef_init
         rng = np.random.default_rng(0)
         g = rng.normal(size=(64, 32)).astype(np.float32)
-        @partial(jax.shard_map, mesh=mesh, in_specs=(P("x"), P("x")),
+        @partial(shard_map, mesh=mesh, in_specs=(P("x"), P("x")),
                  out_specs=(P("x"), P("x")))
         def f(gl, el):
             out, e = compressed_psum({"w": gl}, {"w": el}, "x")
@@ -158,10 +160,9 @@ def test_spmd_vocab_parallel_loss_matches_local():
         batch = {"tokens": rng.integers(0, 256, (8, 16)).astype(np.int32),
                  "labels": rng.integers(0, 256, (8, 16)).astype(np.int32)}
         loss1, _ = zoo.train_loss_fn(cfg, Parallel(mesh=None))(params, batch)
-        mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh2 = make_mesh((2, 4), ("data", "model"))
         par = Parallel(mesh=mesh2, batch_axes=("data",), model_axis="model")
-        with jax.set_mesh(mesh2):
+        with set_mesh(mesh2):
             loss2, _ = jax.jit(zoo.train_loss_fn(cfg, par))(params, batch)
         assert abs(float(loss1) - float(loss2)) < 2e-2, (float(loss1),
                                                          float(loss2))
