@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                     even / uneven / disturbed clusters)
 * glb_*           — global load balancer: even / uneven / disturbed
                     clusters vs no-lb, async-overlap trace, steal latency
+* serving_*       — elastic serving runtime: steady traffic, hot-spot
+                    traffic (GLB vs no-lb p95), replica-failure recovery
+                    (p95 back within 1.5x of baseline, zero lost seqs)
 * reloc_*         — §5.3 relocation engine micro-benchmarks (host + SPMD)
 * kernel_*        — Pallas-kernel ops (XLA path wall time on CPU; the
                     Pallas path is the TPU target, validated in tests)
@@ -155,6 +158,85 @@ def bench_glb(only=None):
             f"min_load={min(col.local_size(p) for p in g.members)}")
 
 
+def bench_serving(only=None, smoke=False):
+    """Elastic serving rows (ISSUE 2 acceptance lives here).
+
+    ``serving_failover`` kills one of 8 simulated replicas mid-run and
+    *asserts* recovery: p95 decode-step time back within 1.5x of the
+    pre-failure baseline within 10 GLB windows, and zero lost sequences
+    (admitted == live + completed).  ``--smoke`` shrinks the scenario so
+    CI can exercise the full wiring in seconds.
+    """
+    from repro.serving import ServingSim
+    if only:
+        only = [s for s in only if s != "serving"] or None
+    warm_w, post_w = (8, 6) if smoke else (20, 10)
+    arrival = 3.0 if smoke else 5.0
+    period = 4
+
+    def p95_tail(sim, lo, hi):
+        w = sim.window_p95()[lo:hi]
+        return float(np.mean(w)) if w else 0.0
+
+    if not only or "serving_steady" in only:
+        sim = ServingSim(n_replicas=8, arrival_rate=arrival,
+                         glb_period=period, seed=1)
+        t0 = time.perf_counter()
+        sim.run(warm_w * period)
+        wall = (time.perf_counter() - t0) * 1e6 / (warm_w * period)
+        row("serving_steady", wall,
+            f"p95_us={p95_tail(sim, -3, None):.0f};"
+            f"migrated_pages={sim.driver.workload.migrated_pages};"
+            f"lost={sim.driver.lost()}")
+        assert sim.driver.lost() == 0, "steady traffic lost sequences"
+
+    if not only or "serving_hotspot" in only:
+        speeds = (1, 1, 1, 1, 1, 0.4, 1, 1)
+        kw = dict(n_replicas=8, speeds=speeds, arrival_rate=arrival,
+                  glb_period=period, seed=1)
+        base = ServingSim(balance=False, **kw).run(warm_w * period)
+        sim = ServingSim(**kw)
+        t0 = time.perf_counter()
+        sim.run(warm_w * period)
+        wall = (time.perf_counter() - t0) * 1e6 / (warm_w * period)
+        p_lb = p95_tail(sim, -3, None)
+        p_no = p95_tail(base, -3, None)
+        st = sim.driver.glb.stats
+        row("serving_hotspot", wall,
+            f"p95_us={p_lb:.0f};p95_nolb_us={p_no:.0f};"
+            f"improvement_x={p_no / max(p_lb, 1e-9):.2f};"
+            f"overlap={st.overlap_fraction:.2f};"
+            f"moved_traffic={st.entries_rebalanced};lost={sim.driver.lost()}")
+        assert sim.driver.lost() == 0, "hotspot traffic lost sequences"
+
+    if not only or "serving_failover" in only:
+        fail_step = warm_w * period
+        sim = ServingSim(n_replicas=8, arrival_rate=arrival,
+                         glb_period=period, fail_at={fail_step: 3}, seed=2)
+        t0 = time.perf_counter()
+        sim.run((warm_w + post_w) * period)
+        wall = (time.perf_counter() - t0) * 1e6 \
+            / ((warm_w + post_w) * period)
+        d = sim.driver
+        # conservation: every admitted sequence is resident or completed
+        assert d.lost() == 0, \
+            f"lost {d.lost()} sequences across the failover"
+        assert 3 not in d.group.members and d.evicted == [3]
+        baseline = p95_tail(sim, warm_w - 3, warm_w)
+        post = sim.window_p95()[warm_w:]
+        recovery = next((i + 1 for i, p in enumerate(post)
+                         if p <= 1.5 * baseline), None)
+        assert recovery is not None and recovery <= 10, \
+            f"p95 did not recover within 10 windows (baseline={baseline:.0f}" \
+            f", post={[round(p) for p in post]})"
+        row("serving_failover", wall,
+            f"recovery_windows={recovery};p95_baseline_us={baseline:.0f};"
+            f"p95_final_us={post[-1]:.0f};"
+            f"ratio_final={post[-1] / max(baseline, 1e-9):.2f};"
+            f"rehomed_seqs={d.rehomed_seqs};lost=0;"
+            f"survivors={len(d.group.members)}")
+
+
 def bench_relocation():
     from repro.core import (CollectiveMoveManager, DistArray, LongRange,
                             PlaceGroup)
@@ -268,34 +350,39 @@ def roofline_table():
 
 
 GROUPS = {
-    "kmeans": lambda sels: bench_kmeans(),
-    "moldyn": lambda sels: bench_moldyn(),
-    "plham": lambda sels: bench_plham(),
-    "glb": lambda sels: bench_glb(only=sels or None),
-    "reloc": lambda sels: bench_relocation(),
-    "kernel": lambda sels: bench_kernels(),
-    "train": lambda sels: bench_train_smoke(),
-    "roofline": lambda sels: roofline_table(),
+    "kmeans": lambda sels, smoke: bench_kmeans(),
+    "moldyn": lambda sels, smoke: bench_moldyn(),
+    "plham": lambda sels, smoke: bench_plham(),
+    "glb": lambda sels, smoke: bench_glb(only=sels or None),
+    "serving": lambda sels, smoke: bench_serving(only=sels or None,
+                                                 smoke=smoke),
+    "reloc": lambda sels, smoke: bench_relocation(),
+    "kernel": lambda sels, smoke: bench_kernels(),
+    "train": lambda sels, smoke: bench_train_smoke(),
+    "roofline": lambda sels, smoke: roofline_table(),
 }
 
 
 def main(argv=None) -> None:
     """No args: run everything.  With args, run only the selected rows —
     a selector is a group prefix (``glb``) or a row name
-    (``glb_disturbed``, ``glb_steal_latency``)."""
+    (``glb_disturbed``, ``glb_steal_latency``).  ``--smoke`` shrinks the
+    scenarios (CI wiring check; currently honored by ``serving_*``)."""
     import sys
     sels = list(sys.argv[1:] if argv is None else argv)
+    smoke = "--smoke" in sels
+    sels = [s for s in sels if s != "--smoke"]
     print("name,us_per_call,derived")
     if not sels:
         for fn in GROUPS.values():
-            fn([])
+            fn([], smoke)
         return
     matched = set()
     for group, fn in GROUPS.items():
         mine = [s for s in sels if s == group or s.startswith(group + "_")]
         if mine:
             matched.update(mine)
-            fn(mine)
+            fn(mine, smoke)
     unknown = [s for s in sels if s not in matched]
     if unknown:
         print(f"error: unknown selector(s) {unknown}; "

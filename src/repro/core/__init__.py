@@ -24,6 +24,7 @@ from .glb import (
     GLBStats,
     GlobalLoadBalancer,
     ListWorkload,
+    MultiCollectionWorkload,
     hypercube_lifelines,
     moves_to_matrix,
     ring_lifelines,
@@ -53,7 +54,8 @@ __all__ = [
     "DistIdMap", "DistMap", "DistMultiMap", "PlaceGroup",
     "DistributionDelta", "LongRange", "RangeDistribution",
     "ClusterSim", "DistArrayWorkload", "GLBConfig", "GLBStats",
-    "GlobalLoadBalancer", "ListWorkload", "hypercube_lifelines",
+    "GlobalLoadBalancer", "ListWorkload", "MultiCollectionWorkload",
+    "hypercube_lifelines",
     "moves_to_matrix", "ring_lifelines", "spmd_rebalance",
     "RangedListProduct", "Tile",
     "AsyncRelocation", "CollectiveMoveManager", "spmd_counts",

@@ -388,6 +388,11 @@ class DistMap(DistCollection):
     def __init__(self, group: PlaceGroup, *, multi: bool = False):
         super().__init__(group)
         self.multi = multi
+        # Concurrent callers (the serving tier retires sequences while an
+        # async window's phase 1 extracts) opt in to tolerating keys that
+        # vanish between registration and extraction; for everyone else a
+        # missing key stays a loud error, not silent entry loss.
+        self.tolerate_missing_keys = False
 
     def _new_handle(self) -> dict:
         return {}
@@ -433,7 +438,17 @@ class DistMap(DistCollection):
 
     def _extract_keys(self, place: int, keys):
         h = self.handle(place)
-        return [(k, h.pop(k)) for k in keys]
+        out = []
+        for k in keys:
+            try:
+                out.append((k, h.pop(k)))
+            except KeyError:
+                # removed between registration and extraction (e.g. a
+                # serving sequence retired while the async window's
+                # phase 1 ran) — nothing to relocate for this key
+                if not self.tolerate_missing_keys:
+                    raise
+        return out
 
     def _insert_payload(self, dest: int, payload) -> None:
         h = self.handle(dest)

@@ -22,11 +22,20 @@ hand.  This module turns it into a library feature:
 * **SPMD mirror** — :func:`spmd_rebalance` applies a
   :class:`BalanceDecision` *inside* jit/shard_map as a capacity-masked
   ``lax.all_to_all`` shuffle, reusing :func:`spmd_relocate`.
+* **Failure awareness** — :meth:`GlobalLoadBalancer.evict_place`
+  removes a dead member: the lifeline graph is rebuilt over the
+  survivors, and planning/stealing mask the dead member out so no move
+  ever targets it (the serving runtime and
+  ``runtime/fault_tolerance.py`` call this from the heartbeat path).
 
 Work sources are abstracted behind a two-method protocol (``loads`` /
 ``transfer``) so the same balancer drives relocatable collections
-(PlhamJ agents, K-Means points) and plain per-place work lists (MolDyn
-force tiles).
+(PlhamJ agents, K-Means points), plain per-place work lists (MolDyn
+force tiles), and traffic-keyed serving pools
+(``serving/workload.TrafficWorkload`` — loads may be any integer cost
+units: entries, KV token pages, or EWMA-weighted traffic).
+:class:`MultiCollectionWorkload` carries several co-partitioned
+collections through one ``sync_async`` window (paper Listing 12).
 """
 from __future__ import annotations
 
@@ -48,6 +57,7 @@ __all__ = [
     "Workload",
     "DistArrayWorkload",
     "ListWorkload",
+    "MultiCollectionWorkload",
     "ring_lifelines",
     "hypercube_lifelines",
     "moves_to_matrix",
@@ -146,6 +156,60 @@ class DistArrayWorkload:
         return handle
 
 
+class MultiCollectionWorkload(DistArrayWorkload):
+    """Several co-partitioned collections balanced as one unit (paper
+    Listing 12: multiple collections registered under a single
+    ``CollectiveMoveManager`` sync).
+
+    The ``primary`` collection drives planning (its entry counts are the
+    loads); every companion must hold the *same range layout* so the
+    lazily-resolved count moves pick identical ranges — which makes one
+    ``sync_async`` window carry, e.g., KV pages and sequence metadata
+    together, keeping them co-resident across migrations.
+    """
+
+    def __init__(self, primary: DistArray, companions: Sequence[DistArray],
+                 members: Sequence[int] | None = None, *, min_keep: int = 1):
+        super().__init__(primary, members, min_keep=min_keep)
+        self.companions = tuple(companions)
+
+    def layouts_consistent(self) -> bool:
+        """True when every companion mirrors the primary's range layout
+        (the co-partitioning invariant transfers preserve)."""
+        return all(
+            all(comp.ranges(p) == self.col.ranges(p) for p in self.members)
+            for comp in self.companions)
+
+    def transfer(self, moves, *, asynchronous: bool = False):
+        # count moves resolve lazily from each collection's own chunks —
+        # a drifted companion would silently ship different entries, so
+        # check the invariant once per window (registration below does
+        # not mutate layouts, so per-move re-checks would be redundant)
+        if moves and not self.layouts_consistent():
+            raise ValueError(
+                "companion layout diverged from primary; co-partitioned "
+                "collections must hold identical range layouts")
+        mm = CollectiveMoveManager(self.col.group)
+        moved = 0
+        for src_i, dest_i, count in moves:
+            src, dest = self.members[src_i], self.members[dest_i]
+            avail = self.col.local_size(src)
+            n = min(int(count), max(avail - self.min_keep, 0))
+            if n > 0:
+                self.col.move_at_sync_count(src, n, dest, mm)
+                for comp in self.companions:
+                    comp.move_at_sync_count(src, n, dest, mm)
+                moved += n
+        self.last_transfer_count = moved
+        if not mm.pending():
+            return None
+        update = tuple(c for c in (self.col, *self.companions) if c.track)
+        handle = mm.sync_async(update_dists=update)
+        if not asynchronous:
+            handle.finish()
+        return handle
+
+
 class ListWorkload:
     """Per-member Python lists of work items (e.g. MolDyn force tiles).
     ``weight`` maps an item to its cost in load units; transfers pop
@@ -213,6 +277,7 @@ class GLBStats:
     bytes_moved: int = 0            # relocation payload bytes (rebalances)
     syncs_overlapped: int = 0
     syncs_total: int = 0
+    places_evicted: int = 0         # dead members removed from the graph
 
     @property
     def overlap_fraction(self) -> float:
@@ -255,6 +320,7 @@ class GlobalLoadBalancer:
         if hasattr(workload, "min_keep"):
             workload.min_keep = max(workload.min_keep, self.cfg.min_keep)
         self.policy = self.cfg.make_policy()
+        self._alive: list[int] = list(range(self.n))
         self.lifelines = _LIFELINES[self.cfg.lifeline](self.n)
         self.rng = np.random.default_rng(self.cfg.seed)
         self.stats = GLBStats()
@@ -273,6 +339,32 @@ class GlobalLoadBalancer:
     def record_all(self, seconds) -> None:
         self._acc += np.asarray(seconds, np.float64)
 
+    # -- failure awareness (heartbeat → eviction, ROADMAP FT-GLB item) ----
+    def alive_members(self) -> tuple[int, ...]:
+        return tuple(self._alive)
+
+    def evict_place(self, member: int) -> None:
+        """Remove a dead member: settle any in-flight relocation, rebuild
+        the lifeline graph over the survivors, and zero its accumulated
+        timings so planning and stealing never target it again.  The
+        caller is responsible for re-homing its entries first (see
+        ``runtime.fault_tolerance.rehome_dead_place``)."""
+        if member not in self._alive:
+            return
+        self.finish()
+        self._alive.remove(member)
+        self._rebuild_lifelines()
+        self._acc[member] = 0.0
+        if self._smoothed is not None:
+            self._smoothed[member] = 0.0
+        self.stats.places_evicted += 1
+
+    def _rebuild_lifelines(self) -> None:
+        base = _LIFELINES[self.cfg.lifeline](len(self._alive))
+        self.lifelines = {
+            self._alive[i]: tuple(self._alive[j] for j in nbrs)
+            for i, nbrs in base.items()}
+
     # -- the periodic loop ------------------------------------------------
     def step(self) -> BalanceDecision | None:
         """Advance one iteration; every ``period`` iterations exchange
@@ -290,7 +382,16 @@ class GlobalLoadBalancer:
                 self._smoothed = (self.cfg.ema * self._smoothed
                                   + (1 - self.cfg.ema) * times)
             times = self._smoothed
-        decision = self.policy.plan(times, self.workload.loads())
+        loads = np.asarray(self.workload.loads())
+        if len(self._alive) < self.n:
+            # compact to the surviving members, plan, remap the move
+            # indices back — a dead place is never a source or target
+            alive = self._alive
+            sub = self.policy.plan(np.asarray(times)[alive], loads[alive])
+            decision = BalanceDecision(tuple(
+                (alive[s], alive[d], c) for s, d, c in sub.moves))
+        else:
+            decision = self.policy.plan(times, loads)
         self._acc[:] = 0.0
         self.history.append(decision)
         if decision.moves:
@@ -304,15 +405,21 @@ class GlobalLoadBalancer:
         return decision
 
     def finish(self) -> None:
-        """Barrier for the in-flight relocation (no-op when idle)."""
-        if self._pending is not None:
-            self._pending.finish()
-            self.stats.syncs_total += 1
-            self.stats.bytes_moved += self._pending.manager.last_payload_bytes
-            if self._pending.overlapped:
-                self.stats.syncs_overlapped += 1
-            self.last_trace = dict(self._pending.trace)
-            self._pending = None
+        """Barrier for the in-flight relocation (no-op when idle).
+
+        The handle is detached *before* the barrier: if phase 1 raised on
+        the background thread the exception propagates here, but the
+        balancer is left consistent (no sync counted, nothing pending) so
+        the caller can keep stepping after handling it."""
+        pending, self._pending = self._pending, None
+        if pending is None:
+            return
+        pending.finish()
+        self.stats.syncs_total += 1
+        self.stats.bytes_moved += pending.manager.last_payload_bytes
+        if pending.overlapped:
+            self.stats.syncs_overlapped += 1
+        self.last_trace = dict(pending.trace)
 
     # -- lifeline stealing ------------------------------------------------
     def _serve(self, victim: int, thief: int) -> int:
@@ -329,12 +436,14 @@ class GlobalLoadBalancer:
         walk of the lifeline graph.  Returns entries acquired (0 means
         the thief hangs on its lifelines — with every place in that
         state, the computation has terminated)."""
+        if thief not in self._alive:
+            return 0
         self.finish()   # never race an in-flight rebalance
         t0 = time.perf_counter()
         self.stats.steals_attempted += 1
         loads = self.workload.loads()
         candidates: list[tuple[int, int]] = []  # (victim, hops)
-        others = [p for p in range(self.n) if p != thief]
+        others = [p for p in self._alive if p != thief]
         if others and self.cfg.random_steal_attempts > 0:
             picks = self.rng.choice(
                 others, size=min(self.cfg.random_steal_attempts, len(others)),
@@ -380,11 +489,12 @@ class GlobalLoadBalancer:
         self.finish()
         loads = self.workload.loads()
         total = 0
-        for p in range(self.n):
+        for p in self._alive:
             if loads[p] <= self.cfg.idle_threshold:
                 total += self.steal(p)
         if total == 0 and bool(
-                np.all(self.workload.loads() <= self.cfg.idle_threshold)):
+                np.all(np.asarray(self.workload.loads())[self._alive]
+                       <= self.cfg.idle_threshold)):
             self._terminated = True
         return total
 

@@ -119,6 +119,44 @@ class CollectiveMoveManager:
                            rule: Callable[[Any], int]) -> None:
         self._key_moves.append(_KeyMove(col, src, rule))
 
+    def register_drain(self, col, src: int, dests: "Sequence[int]", *,
+                       rule: Callable[[Any], int] | None = None) -> int:
+        """Failure recovery: register moves that take *every* entry off
+        ``src`` and spread them across ``dests`` (round-robin for keyed
+        collections, near-equal counts for arrays/bags), unless ``rule``
+        overrides the key→destination placement.  Composes with other
+        registrations — the whole drain rides one sync window.  Returns
+        the number of entries registered."""
+        dests = [d for d in dests if d != src]
+        if not dests:
+            raise ValueError("drain needs at least one destination != src")
+        if isinstance(col, DistMap):
+            keys = col.keys(src)
+            if rule is None:
+                assign = {k: dests[i % len(dests)]
+                          for i, k in enumerate(keys)}
+                rule = lambda k: assign.get(k, src)  # noqa: E731
+            if keys:
+                self.register_key_moves(col, src, rule)
+            return len(keys)
+        if isinstance(col, DistArray):
+            total = col.local_size(src)
+            share, rem = divmod(total, len(dests))
+            for i, d in enumerate(dests):
+                n = share + (1 if i < rem else 0)
+                if n > 0:
+                    self.register_array_count_move(col, src, n, d)
+            return total
+        if isinstance(col, DistBag):
+            total = col.local_size(src)
+            share, rem = divmod(total, len(dests))
+            for i, d in enumerate(dests):
+                n = share + (1 if i < rem else 0)
+                if n > 0:
+                    self.register_bag_move(col, src, n, d)
+            return total
+        raise TypeError(f"cannot drain collection type {type(col).__name__}")
+
     def pending(self) -> int:
         return (len(self._range_moves) + len(self._bag_moves)
                 + len(self._key_moves) + len(self._array_count_moves))

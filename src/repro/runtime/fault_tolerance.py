@@ -28,7 +28,32 @@ from ..core import (CollectiveMoveManager, LevelExtremes, LoadBalancer,
                     LongRange, PlaceGroup, Proportional, RangeDistribution)
 
 __all__ = ["HeartbeatMonitor", "StragglerMitigator", "ElasticWorld",
-           "FaultTolerantDriver"]
+           "FaultTolerantDriver", "rehome_dead_place"]
+
+
+def rehome_dead_place(group: PlaceGroup, dead: int, collections,
+                      *, dests=None) -> int:
+    """Drain-and-re-home: move every entry held by ``dead`` onto the
+    surviving places through one collective relocation window (all
+    collections ride the same sync — paper Listing 12), then reconcile
+    the tracked distributions.  Returns the number of entries re-homed.
+
+    This is the failure half of the ROADMAP's fault-tolerant-GLB item:
+    heartbeats detect the death, :meth:`GlobalLoadBalancer.evict_place`
+    removes it from the lifeline graph, and this function gives its
+    entries a new home via the relocation engine."""
+    dests = [p for p in (dests if dests is not None else group.members)
+             if p != dead and p in group]
+    mm = CollectiveMoveManager(group)
+    moved = 0
+    for col in collections:
+        moved += mm.register_drain(col, dead, dests)
+    if mm.pending():
+        mm.sync()
+    for col in collections:
+        if hasattr(col, "update_dist") and getattr(col, "track", True):
+            col.update_dist()
+    return moved
 
 
 class HeartbeatMonitor:
@@ -85,6 +110,24 @@ class ElasticWorld:
         self.group = group
         self.events: list[tuple[str, int]] = []
 
+    def evict(self, dead: int, collections=()) -> PlaceGroup:
+        """Failure path of :meth:`resize`: drop ``dead`` from the group
+        and re-home its entries on the survivors via the relocation
+        engine (one collective window for all collections)."""
+        if dead not in self.group.members:
+            return self.group
+        survivors = [p for p in self.group.members if p != dead]
+        if not survivors:
+            raise ValueError("cannot evict the last place")
+        rehome_dead_place(self.group, dead, collections)
+        new_group = self.group.subgroup(survivors)
+        for col in collections:
+            col.group = new_group
+            col._handles.pop(dead, None)
+        self.events.append(("evict", dead))
+        self.group = new_group
+        return new_group
+
     def resize(self, new_size: int, collections) -> PlaceGroup:
         old = self.group
         new_group = PlaceGroup(new_size)
@@ -129,6 +172,14 @@ class FaultTolerantDriver:
     mitigator: StragglerMitigator = None
     restarts: int = 0
     step: int = 0
+    # Optional fault-tolerant-GLB wiring: when a GlobalLoadBalancer (and
+    # optionally an ElasticWorld over its collections) is attached, a
+    # detected death evicts the place and re-homes its entries instead
+    # of rolling the whole world back to a checkpoint.
+    glb: object = None
+    world: ElasticWorld = None
+    glb_collections: tuple = ()
+    evictions: int = 0
 
     def __post_init__(self):
         if self.monitor is None:
@@ -144,6 +195,28 @@ class FaultTolerantDriver:
             if p not in failed_places:
                 self.monitor.beat(p)
         dead = self.monitor.tick()
+        if dead and self.glb is not None \
+                and (self.world is not None or self.glb_collections):
+            # fault-tolerant GLB: survivors absorb the dead places' work
+            # through the relocation engine; no rollback, no lost steps.
+            # Settle any in-flight relocation window first — its payloads
+            # may target the place we are about to evict.  (With neither
+            # a world nor collections to re-home, eviction would strand
+            # the dead place's entries — fall through to restore instead.)
+            self.glb.finish()
+            for p in dead:
+                if self.world is not None:
+                    self.world.evict(p, self.glb_collections)
+                else:
+                    # survivors only: the glb group never shrinks, so
+                    # earlier-evicted places must not be drain targets
+                    rehome_dead_place(self.glb.group, p,
+                                      self.glb_collections,
+                                      dests=self.glb.alive_members())
+                self.glb.evict_place(p)
+                self.evictions += 1
+            info["evicted"] = dead
+            dead = []
         if dead:
             # checkpoint-restart: reload last committed state and retry
             state, manifest = self.ckpt_manager.restore(state)

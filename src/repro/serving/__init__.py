@@ -1,1 +1,24 @@
-from .cache import *  # noqa: F401,F403
+"""Elastic serving runtime (traffic-keyed GLB + failure-aware placement).
+
+Layers:
+
+* ``cache``    — :class:`ServingPool`: the simple continuous-batching
+  pool on the one-shot balancer (kept for the basic example).
+* ``workload`` — :class:`TrafficWorkload`: the GLB ``Workload`` adapter
+  keyed by decode-time EWMA × resident KV token budget.
+* ``router``   — :class:`Router`: dispatch against the live tracked
+  distribution, consistent across migrations and deaths.
+* ``elastic``  — :class:`ElasticServingDriver` / :class:`ServingSim`:
+  the composed runtime (GLB + heartbeats + elastic world).
+"""
+from .cache import Sequence, ServingPool
+from .elastic import ElasticServingDriver, ServingSim
+from .router import Router
+from .workload import TokenCostModel, TrafficWorkload
+
+__all__ = [
+    "Sequence", "ServingPool",
+    "ElasticServingDriver", "ServingSim",
+    "Router",
+    "TokenCostModel", "TrafficWorkload",
+]

@@ -52,14 +52,31 @@ class ServingPool:
 
     # -- admission ------------------------------------------------------
     def admit(self, prompt_len: int, max_new: int = 64) -> int | None:
-        loads = [self.seqs.local_size(p) for p in self.group.members]
-        p = int(np.argmin(loads))
-        if loads[p] >= self.slots:
+        """Place a new sequence on the least-loaded replica *alive in the
+        current place group* (evicted replicas are gone from
+        ``group.members``, so they are never admission targets — and the
+        argmin index is mapped back to a member id, which differ once the
+        group is non-contiguous)."""
+        members = list(self.group.members)
+        loads = [self.seqs.local_size(p) for p in members]
+        i = int(np.argmin(loads))
+        if loads[i] >= self.slots:
             return None
+        p = members[i]
         sid = self.next_id
         self.next_id += 1
         self.seqs.put(p, sid, Sequence(sid, prompt_len, max_new=max_new))
         return sid
+
+    def evict(self, dead: int) -> None:
+        """Drop a dead replica: re-home its sequences on the survivors
+        through the relocation engine and shrink the place group."""
+        from ..runtime.fault_tolerance import ElasticWorld
+        self.group = ElasticWorld(self.group).evict(dead, (self.seqs,))
+        # the balancer's index space follows the surviving members
+        self.balancer = LoadBalancer(self.group.size(),
+                                     strategy=self.balancer.strategy,
+                                     period=self.balancer.period)
 
     def replica_of(self, sid: int) -> int:
         return self.seqs.get_distribution().owner_of(sid)
@@ -84,13 +101,19 @@ class ServingPool:
         self.balancer.record_all(decode_times)
         decision = self.balancer.step(self.loads())
         if decision and decision.moves:
+            members = list(self.group.members)
             mm = CollectiveMoveManager(self.group)
-            for src, dest, count in decision.moves:
+            for src_i, dest_i, count in decision.moves:
+                src, dest = members[src_i], members[dest_i]
                 sids = self.seqs.keys(src)[:count]
                 moved = set(sids)
                 if moved:
+                    # bind per-move: rules evaluate lazily at sync, so a
+                    # late-binding closure would apply the LAST move's
+                    # src/dest to every registered rule
                     self.seqs.move_at_sync(
-                        src, lambda k: dest if k in moved else src, mm)
+                        src, lambda k, m=moved, d=dest, s=src:
+                        d if k in m else s, mm)
             mm.sync()
             self.relocations += mm.last_payload_bytes
             self.seqs.update_dist()

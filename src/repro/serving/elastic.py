@@ -1,0 +1,269 @@
+"""Elastic serving runtime: traffic-driven KV-shard migration with
+failure-aware placement.
+
+:class:`ElasticServingDriver` composes the pieces the ROADMAP's two
+serving items call for:
+
+* a :class:`~repro.serving.workload.TrafficWorkload` (sequence metadata
+  + KV pages as co-partitioned ``DistIdMap`` collections) driven by a
+  :class:`~repro.core.glb.GlobalLoadBalancer` whose relocation windows
+  run through ``CollectiveMoveManager.sync_async`` — KV-shard migration
+  overlaps the decode steps;
+* a :class:`~repro.serving.router.Router` that admits/dispatches against
+  the live tracked distribution and stays consistent across migrations;
+* a :class:`~repro.runtime.fault_tolerance.HeartbeatMonitor` +
+  :class:`~repro.runtime.fault_tolerance.ElasticWorld` failure path: a
+  dead replica is evicted from the lifeline graph
+  (``GlobalLoadBalancer.evict_place``), its in-flight sequences re-home
+  through the relocation engine (``rehome_dead_place`` under
+  ``ElasticWorld.evict``), and the ``PlaceGroup`` shrinks.
+
+:class:`ServingSim` wraps the driver in a simulated replica cluster
+(decode time grows with resident KV pages, divided by per-replica
+speed) with an arrival process and a failure schedule — the §6.3
+"disturbed cluster" methodology transplanted to serving, used by
+``tests/test_serving.py`` and the ``serving_*`` benchmark rows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from ..core import DistIdMap, GLBConfig, GlobalLoadBalancer, PlaceGroup
+from ..runtime.fault_tolerance import ElasticWorld, HeartbeatMonitor
+from .cache import Sequence
+from .router import Router
+from .workload import TokenCostModel, TrafficWorkload
+
+__all__ = ["ElasticServingDriver", "ServingSim"]
+
+
+class ElasticServingDriver:
+    """Continuous-batching serving pool with traffic-driven rebalancing
+    and failure-aware placement."""
+
+    def __init__(self, n_replicas: int, *, slots_per_replica: int = 32,
+                 glb: GLBConfig | None = None, heartbeat_timeout: int = 2,
+                 page_tokens: int = 16, traffic_ema: float = 0.5):
+        self.group = PlaceGroup(n_replicas)
+        self.slots = slots_per_replica
+        self.seqs = DistIdMap(self.group)
+        self.kv = DistIdMap(self.group)
+        for p in self.group.members:   # eager handles: empty != unknown
+            self.seqs.handle(p)
+            self.kv.handle(p)
+        self.cost = TokenCostModel(page_tokens)
+        self.workload = TrafficWorkload(self.seqs, self.kv,
+                                        cost_model=self.cost,
+                                        ema=traffic_ema)
+        self.glb = GlobalLoadBalancer(
+            self.group, self.workload,
+            glb or GLBConfig(period=4, policy="proportional", ema=0.3))
+        self.monitor = HeartbeatMonitor(n_replicas,
+                                        timeout_steps=heartbeat_timeout)
+        self.world = ElasticWorld(self.group)
+        self.router = Router(self.seqs)
+        self.next_id = 0
+        self.admitted = 0
+        self.completed: list[int] = []
+        self.evicted: list[int] = []
+        self.rehomed_seqs = 0
+        self._kv_gc: set[int] = set()   # retired seqs whose KV is in flight
+
+    # -- admission (alive replicas only) ----------------------------------
+    def admit(self, prompt_len: int, max_new: int = 64) -> int | None:
+        """Admit one request onto the least-loaded replica of the
+        *current* place group; None when every live replica is full."""
+        members = list(self.group.members)
+        loads = [self.seqs.local_size(p) for p in members]
+        i = int(np.argmin(loads))
+        if loads[i] >= self.slots:
+            return None
+        p = members[i]               # argmin is an index, not a place id
+        sid = self.next_id
+        self.next_id += 1
+        seq = Sequence(sid, prompt_len, max_new=max_new)
+        self.seqs.put(p, sid, seq)
+        # KV token budget allocated up front (prompt + generation room)
+        budget = self.cost.pages(
+            Sequence(sid, prompt_len, generated=max_new))
+        self.kv.put(p, sid, np.zeros((budget, self.cost.page_tokens),
+                                     np.float32))
+        self.admitted += 1
+        return sid
+
+    # -- one decode round --------------------------------------------------
+    def step(self, decode_times, failed=()) -> dict:
+        """Advance one lockstep decode round.
+
+        ``decode_times`` is aligned to the *initial* member order (use
+        NaN for replicas that produced nothing); ``failed`` lists
+        replicas that went silent this round — they miss their heartbeat
+        and are evicted once the monitor times them out.
+        """
+        info: dict = {}
+        failed = set(failed)
+        for p in self.group.members:
+            if p not in failed:
+                self.monitor.beat(p)
+        for dead in self.monitor.tick():
+            self._evict(dead)
+            info.setdefault("evicted", []).append(dead)
+        # decode: advance resident sequences on live replicas, retire done
+        for p in self.group.members:
+            if p in failed:
+                continue
+            h = self.seqs.handle(p)
+            kvh = self.kv.handle(p)
+            for sid in list(h):
+                # sequences chosen for migration extract on the async
+                # window's background thread — skip ones already in flight
+                s = h.get(sid)
+                if s is None:
+                    continue
+                s.generated += 1
+                if s.done:
+                    # retire only if we win the pop: the background
+                    # thread may have extracted the sequence into a
+                    # migration payload after our get() — then it is
+                    # in flight, not finished, and retires at the
+                    # destination next round (kv stays untouched here
+                    # so the pair migrates together)
+                    if h.pop(sid, None) is not None:
+                        if kvh.pop(sid, None) is None:
+                            # the async window already extracted the KV
+                            # pages — they will land at the destination
+                            # with no owning sequence; collect them once
+                            # the window delivers
+                            self._kv_gc.add(sid)
+                        self.completed.append(sid)
+        # traffic-keyed rebalance (async: migration overlaps next round)
+        t = np.asarray(decode_times, np.float64)
+        self.workload.observe(t)
+        self.glb.record_all(np.where(np.isfinite(t), t, 0.0))
+        decision = self.glb.step()
+        if decision is not None:
+            info["rebalance"] = decision
+        self._collect_orphaned_kv()
+        self.router.refresh()
+        return info
+
+    def _collect_orphaned_kv(self) -> None:
+        """Reap KV pages whose sequence retired while the pages were in
+        a migration window (they get delivered ownerless)."""
+        for sid in list(self._kv_gc):
+            for p in self.group.members:
+                if self.kv.handle(p).pop(sid, None) is not None:
+                    self._kv_gc.discard(sid)
+                    break
+
+    def _evict(self, dead: int) -> None:
+        """The fault-tolerant-GLB path: settle the in-flight window, stop
+        routing to the dead replica, re-home its sequences + KV pages on
+        the survivors, drop it from the lifeline graph, and shrink the
+        place group."""
+        self.glb.finish()
+        self.router.mark_dead(dead)
+        before = self.seqs.local_size(dead) if dead in self.group else 0
+        self.group = self.world.evict(dead, (self.seqs, self.kv))
+        self.glb.evict_place(self.workload.members.index(dead))
+        self.rehomed_seqs += before
+        self.evicted.append(dead)
+        self.router.refresh()
+
+    # -- barriers / accounting --------------------------------------------
+    def sync(self) -> None:
+        """Drain the in-flight migration window and re-snapshot the
+        router (the reconciling barrier)."""
+        self.glb.finish()
+        self._collect_orphaned_kv()
+        self.router.refresh()
+
+    def live(self) -> int:
+        return self.seqs.global_size()
+
+    def lost(self) -> int:
+        """Sequences unaccounted for (must stay 0): admitted but neither
+        resident nor completed.  Call :meth:`sync` first so in-flight
+        migrations are delivered."""
+        return self.admitted - self.live() - len(self.completed)
+
+    def loads(self) -> np.ndarray:
+        return np.asarray([self.seqs.local_size(p)
+                           for p in self.group.members], np.int64)
+
+
+@dataclass
+class ServingSim:
+    """Simulated replica cluster around an :class:`ElasticServingDriver`.
+
+    Replica ``p`` decodes a lockstep batch in
+    ``(base_us + per_page_us * resident KV pages) / speeds[p]`` simulated
+    microseconds; the slowest live replica sets the step time.  Requests
+    arrive Poisson(``arrival_rate``) per step; ``fail_at`` maps step
+    index → replica id to kill (it stops heartbeating and decoding).
+    """
+
+    n_replicas: int = 8
+    slots: int = 32
+    speeds: tuple = ()
+    base_us: float = 200.0
+    per_page_us: float = 8.0
+    arrival_rate: float = 4.0
+    prompt_range: tuple = (16, 96)
+    max_new_range: tuple = (16, 48)
+    fail_at: dict = field(default_factory=dict)
+    glb_period: int = 4
+    policy: str = "proportional"
+    balance: bool = True
+    heartbeat_timeout: int = 2
+    page_tokens: int = 16
+    seed: int = 0
+
+    def __post_init__(self):
+        period = self.glb_period if self.balance else 10 ** 9
+        self.driver = ElasticServingDriver(
+            self.n_replicas, slots_per_replica=self.slots,
+            glb=GLBConfig(period=period, policy=self.policy, ema=0.3,
+                          asynchronous=True),
+            heartbeat_timeout=self.heartbeat_timeout,
+            page_tokens=self.page_tokens)
+        if not self.speeds:
+            self.speeds = (1.0,) * self.n_replicas
+        self.rng = np.random.default_rng(self.seed)
+        self.failed: set[int] = set()
+        self.step_times: list[float] = []
+        self.iter = 0
+
+    def _decode_time(self, p: int) -> float:
+        pages = self.driver.workload.pages_of(p)
+        noise = 1.0 + 0.02 * self.rng.standard_normal()
+        return (self.base_us + self.per_page_us * pages) \
+            / self.speeds[p] * max(noise, 0.5)
+
+    def run(self, steps: int) -> "ServingSim":
+        d = self.driver
+        for _ in range(steps):
+            if self.iter in self.fail_at:
+                self.failed.add(self.fail_at[self.iter])
+            for _ in range(self.rng.poisson(self.arrival_rate)):
+                d.admit(int(self.rng.integers(*self.prompt_range)),
+                        int(self.rng.integers(*self.max_new_range)))
+            t = np.full(self.n_replicas, np.nan)
+            for p in d.group.members:
+                if p not in self.failed:
+                    t[p] = self._decode_time(p)
+            # lockstep batch: the slowest live replica sets the pace
+            self.step_times.append(float(np.nanmax(t)))
+            d.step(t, failed=self.failed)
+            self.iter += 1
+        d.sync()
+        return self
+
+    # -- window statistics (windows = GLB periods) -------------------------
+    def window_p95(self) -> list[float]:
+        w = max(self.glb_period, 1)
+        times = np.asarray(self.step_times)
+        return [float(np.percentile(times[i:i + w], 95))
+                for i in range(0, len(times) - w + 1, w)]

@@ -1,0 +1,94 @@
+"""Front-end request router over the live sequence distribution.
+
+The paper's §4.4/§4.6 dispatch pattern applied to serving: follow-up
+decode requests for a sequence are routed by the *tracked distribution*
+of the sequence ``DistIdMap``, which ``update_dist`` reconciles after
+every migration window — so the router keeps dispatching correctly
+while the GLB moves KV shards underneath it.
+
+Failure handling: :meth:`Router.mark_dead` drains the dead replica's
+request queue back into a retry buffer; once the eviction path re-homes
+the sequences (``rehome_dead_place``) and :meth:`Router.refresh` picks
+up the new distribution, the drained requests re-dispatch to the
+surviving owners.
+"""
+from __future__ import annotations
+
+from ..core import DistIdMap
+
+__all__ = ["Router"]
+
+
+class Router:
+    """Admission/dispatch front end for a replicated serving pool."""
+
+    def __init__(self, seqs: DistIdMap, *, max_retries: int = 8):
+        self.seqs = seqs
+        self._dist = seqs.get_distribution()
+        self.dead: set[int] = set()
+        self.queues: dict[int, list] = {p: [] for p in seqs.group.members}
+        self.max_retries = max_retries
+        self.routed = 0
+        self.rerouted = 0
+        self.dropped = 0
+        self.retries: list[tuple[int, object, int]] = []  # (sid, payload, n)
+
+    # -- distribution consistency ----------------------------------------
+    def refresh(self) -> None:
+        """Re-snapshot the tracked distribution (call after a migration
+        window reconciles via ``update_dist``) and re-drive any requests
+        that were parked while their sequence had no live owner."""
+        self._dist = self.seqs.get_distribution()
+        for p in self.seqs.group.members:
+            self.queues.setdefault(p, [])
+        retries, self.retries = self.retries, []
+        for sid, payload, attempts in retries:
+            self.dispatch(sid, payload, _attempts=attempts + 1)
+
+    def owner(self, sid: int) -> int | None:
+        """Current owner of ``sid`` per the routing table; None when the
+        sequence is unknown, retired, or stranded on a dead replica."""
+        try:
+            o = self._dist.owner_of(int(sid))
+        except KeyError:
+            return None
+        if o in self.dead or o not in self.seqs.group:
+            return None
+        if int(sid) not in self.seqs.handle(o):
+            return None   # retired, or mid-migration (table lags one sync)
+        return o
+
+    # -- dispatch ---------------------------------------------------------
+    def dispatch(self, sid: int, payload=None, *,
+                 _attempts: int = 0) -> int | None:
+        """Route a decode request to its sequence's replica.  Requests
+        with no live owner (mid-migration or mid-eviction) park in the
+        retry buffer and re-route on the next :meth:`refresh`; after
+        ``max_retries`` refreshes without a live owner (sequence retired
+        or never existed) the request is dropped, not re-parked."""
+        o = self.owner(sid)
+        if o is None:
+            if _attempts >= self.max_retries:
+                self.dropped += 1
+            else:
+                self.retries.append((sid, payload, _attempts))
+            return None
+        self.queues[o].append((sid, payload))
+        self.routed += 1
+        return o
+
+    def drain(self, place: int) -> list:
+        """Take the pending requests queued at ``place`` (a replica's
+        per-step batch pull)."""
+        q = self.queues.get(place, [])
+        self.queues[place] = []
+        return q
+
+    # -- failure ----------------------------------------------------------
+    def mark_dead(self, place: int) -> None:
+        """Stop routing to ``place``; its queued requests move to the
+        retry buffer until the eviction re-homes their sequences."""
+        self.dead.add(place)
+        stranded = self.queues.pop(place, [])
+        self.retries.extend((sid, payload, 0) for sid, payload in stranded)
+        self.rerouted += len(stranded)

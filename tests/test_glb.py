@@ -142,6 +142,64 @@ class TestAsyncRelocation:
         h.finish()
         assert mm.syncs == syncs
 
+    def test_double_finish_delivers_once(self):
+        g, col = make_col()
+        before = entry_multiset(col, 120)
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(0, 10, 2, mm)
+        h = mm.sync_async(update_dists=(col,))
+        h.finish().finish()
+        assert entry_multiset(col, 120) == before   # no duplication
+        assert col.local_size(2) == 40
+        assert mm.syncs == 1
+
+    def test_finish_with_zero_moves(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        h = mm.sync_async(update_dists=(col,))      # nothing registered
+        h.finish()
+        assert h.finished
+        assert mm.syncs == 1
+        assert np.asarray(mm.last_counts_matrix).sum() == 0
+        assert mm.last_payload_bytes == 0
+        assert entry_multiset(col, 120) == sorted(float(i)
+                                                  for i in range(120))
+
+    def test_background_raise_rethrows_on_every_finish(self):
+        g, col = make_col()
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(0, 10_000, 1, mm)    # phase 1 will raise
+        h = mm.sync_async()
+        with pytest.raises(ValueError):
+            h.finish()
+        with pytest.raises(ValueError):             # error is never swallowed
+            h.finish()
+        assert not h.finished
+        assert mm.syncs == 0                        # nothing delivered
+
+    def test_glb_overlap_accounting_when_thread_raises(self):
+        """A failing background phase 1 must not corrupt the balancer:
+        the error surfaces at the barrier, no sync is counted, and the
+        balancer keeps stepping afterwards."""
+        g, col = make_col(n_places=4, n=120)
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col),
+                                 GLBConfig(period=1, asynchronous=True))
+        mm = CollectiveMoveManager(g)
+        col.move_at_sync_count(0, 10_000, 1, mm)    # more than place 0 holds
+        glb._pending = mm.sync_async()
+        with pytest.raises(ValueError):
+            glb.finish()
+        assert glb._pending is None                 # detached, not stuck
+        assert glb.stats.syncs_total == 0
+        assert glb.stats.syncs_overlapped == 0
+        # place 0 was emptied by the failed extraction; make place 1 the
+        # straggler so the next window plans (and executes) a real move
+        glb.record_all([1.0, 4.0, 1.0, 1.0])
+        decision = glb.step()                       # still operational
+        assert decision is not None and decision.moves
+        glb.finish()
+        assert glb.stats.syncs_total == 1
+
 
 # ---------------------------------------------------------------------------
 # byte accounting
@@ -290,6 +348,70 @@ class TestStealing:
             glb.steal_pass()
         assert sum(len(x) for x in wl.lists) == 60
         assert all(len(x) > 0 for x in wl.lists)
+
+
+# ---------------------------------------------------------------------------
+# failure awareness: dead-place eviction
+# ---------------------------------------------------------------------------
+class TestEviction:
+    def test_lifelines_rebuilt_over_survivors(self):
+        g, col = make_col(n_places=8, n=800)
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col),
+                                 GLBConfig(lifeline="hypercube"))
+        glb.evict_place(3)
+        assert glb.alive_members() == (0, 1, 2, 4, 5, 6, 7)
+        assert 3 not in glb.lifelines
+        assert all(3 not in nbrs for nbrs in glb.lifelines.values())
+        # still connected over the survivors
+        seen, frontier = {0}, [0]
+        while frontier:
+            frontier = [v for u in frontier for v in glb.lifelines[u]
+                        if v not in seen and not seen.add(v)]
+        assert seen == set(glb.alive_members())
+        assert glb.stats.places_evicted == 1
+        glb.evict_place(3)                       # idempotent
+        assert glb.stats.places_evicted == 1
+
+    def test_plan_never_touches_dead_place(self):
+        g, col = make_col(n_places=4, n=400, skew=0)
+        glb = GlobalLoadBalancer(
+            g, DistArrayWorkload(col),
+            GLBConfig(period=1, policy="proportional", asynchronous=False))
+        glb.evict_place(2)
+        for t in ([9.0, 1.0, 0.0, 1.0], [5.0, 2.0, 0.0, 1.0]):
+            glb.record_all(t)
+            decision = glb.step()
+            assert decision is not None
+            for s, d, _ in decision.moves:
+                assert s != 2 and d != 2
+        glb.finish()
+        assert col.local_size(2) == 0            # nothing ever landed there
+        assert col.global_size() == 400
+
+    def test_steal_skips_dead(self):
+        g, col = make_col(n_places=8, n=800, skew=0)
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col),
+                                 GLBConfig(lifeline="ring"))
+        glb.evict_place(5)
+        for _ in range(6):
+            glb.steal_pass()
+        assert col.local_size(5) == 0
+        assert glb.steal(5) == 0                 # dead thief acquires nothing
+        loads = [col.local_size(p) for p in glb.alive_members()]
+        assert all(l > 0 for l in loads)
+        assert col.global_size() == 800
+
+    def test_termination_over_survivors_only(self):
+        g = PlaceGroup(4)
+        col = DistArray(g, track=True)
+        for p in g.members:
+            col.handle(p)
+        col.add_chunk(2, LongRange(0, 7), np.arange(7)[:, None] * 1.0)
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col),
+                                 GLBConfig(min_keep=0))
+        glb.evict_place(2)                       # the only loaded place dies
+        assert glb.steal_pass() == 0
+        assert glb.is_terminated()               # survivors are all idle
 
 
 # ---------------------------------------------------------------------------
