@@ -1,54 +1,57 @@
 """Serve a small model with batched requests: continuous batching over a
-relocatable sequence pool + real decode steps with KV caches.
+relocatable sequence pool + real decode steps with device-resident KV.
 
-The end-to-end serving driver: admits requests, decodes in lockstep
-batches, retires finished sequences, and relocates sequences between
-(simulated) replicas when decode times drift (paper §4.4-4.6 applied to
-serving).
+The end-to-end real-decode data plane: the jitted ``decode_step`` runs
+each replica's resident batch, *measured* wall-clock step times feed the
+traffic-keyed GLB, and migration windows move sequence metadata together
+with device KV shards (``SeqKV``) through one ``sync_async`` window.
+Replica 2 is an honestly-slow chip (3 decode passes per round), so the
+balancer shifts its sequences — and their device KV — to the fast
+replicas.
+
+Run: PYTHONPATH=src python examples/serve.py
 """
 import sys
 sys.path.insert(0, "src")
 
 import numpy as np
 
-import jax
-from repro.configs import get_config
-from repro.core import PlaceGroup
-from repro.models import Parallel, zoo
-from repro.models import transformer as T
-from repro.serving import ServingPool
+from repro.serving import DecodeEngine, ElasticServingDriver
+from repro.core import GLBConfig
 
 
 def main():
-    cfg = get_config("qwen2-1.5b").reduced(
-        n_layers=4, d_model=128, d_ff=256, vocab_size=2048)
-    par = Parallel(mesh=None)
-    params = zoo.init_params(cfg, 0)
     rng = np.random.default_rng(0)
-
-    B, S_CACHE = 8, 128
-    # real decode: one lockstep batch on this host plays replica 0
-    state = T.init_decode_state(cfg, B, S_CACHE)
-    tokens = rng.integers(0, cfg.vocab_size, (B, 1)).astype(np.int32)
-    decode = jax.jit(lambda p, s, t: T.decode_step(p, cfg, par, s, t))
-
-    # pool across 4 simulated replicas with relocation-based balancing
-    pool = ServingPool(PlaceGroup(4), slots_per_replica=16, lb_period=4)
-    for _ in range(40):
-        pool.admit(prompt_len=int(rng.integers(8, 64)),
-                   max_new=int(rng.integers(8, 32)))
+    engine = DecodeEngine(seed=0)
+    driver = ElasticServingDriver(
+        4, slots_per_replica=16,
+        glb=GLBConfig(period=4, policy="proportional", ema=0.3,
+                      asynchronous=True),
+        engine=engine)
+    work = (1, 1, 3, 1)          # replica 2 runs 3 decode passes per round
 
     for it in range(24):
-        state, logits = decode(params, state, tokens)
-        tokens = np.asarray(jax.numpy.argmax(logits, -1))[:, None].astype(np.int32)
-        # replica decode times: replica 2 is slow (hot node)
-        times = np.array([1.0, 1.0, 2.2, 1.0]) * (1 + 0.05 * rng.random(4))
-        pool.step(times)
+        for _ in range(rng.poisson(3.0)):
+            driver.admit(prompt_len=int(rng.integers(8, 64)),
+                         max_new=int(rng.integers(8, 32)))
+        info = driver.decode_round(work=work)
         if it % 6 == 0:
-            print(f"round {it:2d}: live={pool.live()} done={len(pool.completed)} "
-                  f"loads={pool.loads()} reloc_bytes={pool.relocations}")
-    print(f"generated tokens head: {tokens[:4, 0].tolist()}")
-    print(f"final replica loads (hot replica 2 shed work): {pool.loads()}")
+            t = info["decode_s"]
+            ms = [f"{x * 1e3:.1f}" for x in np.nan_to_num(t)]
+            print(f"round {it:2d}: live={driver.live():3d} "
+                  f"done={len(driver.completed):3d} loads={driver.loads()} "
+                  f"measured_ms={ms}")
+    driver.sync()
+    st = driver.glb.stats
+    on_dev = all(v.on_device() for p in driver.group.members
+                 for v in driver.kv.handle(p).values())
+    print(f"\nmigration windows: {st.rebalances} "
+          f"(overlap={st.overlap_fraction:.2f}, kv_bytes={st.bytes_moved})")
+    print(f"decoded {engine.tokens_decoded} tokens; "
+          f"slow replica 2 load: {driver.loads()[2]} "
+          f"(fast mean {np.delete(driver.loads(), 2).mean():.1f})")
+    assert driver.lost() == 0 and on_dev
+    print("conservation: 0 lost; all KV device-resident")
 
 
 if __name__ == "__main__":

@@ -47,6 +47,16 @@ def _fresh_global_id() -> int:
         return _NEXT_GLOBAL_ID[0]
 
 
+def _value_nbytes(x) -> int:
+    """Payload size without forcing a device→host transfer: device
+    arrays (and pytree payloads exposing ``nbytes``, e.g. the serving
+    tier's per-sequence KV shards) report their size directly."""
+    nb = getattr(x, "nbytes", None)
+    if nb is not None:
+        return int(nb)
+    return int(np.asarray(x).nbytes)
+
+
 class PlaceGroup:
     """Paper's ``TeamedPlaceGroup``: an ordered set of places.
 
@@ -256,6 +266,44 @@ class DistArray(DistCollection):
         idx = np.concatenate([np.arange(r.start, r.end) for r in rs])
         return rows, idx
 
+    # -- device bridge (collection runtime ↔ jitted compute) -------------
+    def to_device(self, place: int):
+        """Pack the place's rows into a device shard: a ``jax.Array``
+        of the local rows plus their global indices (host).  The shard
+        feeds jitted compute; :meth:`from_device` writes results back
+        into the same chunk layout."""
+        import jax
+
+        rows, idx = self.to_local_matrix(place)
+        return jax.device_put(rows), idx
+
+    def from_device(self, place: int, rows, idx=None) -> None:
+        """Write a device shard's rows back into the place's chunks (the
+        inverse of :meth:`to_device`; the chunk layout must not have
+        changed in between — relocation windows go through the move
+        manager, never through this bridge).  Pass the ``idx`` array
+        :meth:`to_device` returned to verify the layout exactly: a
+        relocation can swap equal-*sized* ranges, which a bare row-count
+        check cannot see."""
+        h = self.handle(place)
+        rows = np.asarray(rows)
+        if len(rows) != h.size():
+            raise ValueError(
+                f"device shard holds {len(rows)} rows but place {place} "
+                f"holds {h.size()} — layout changed under the bridge")
+        if idx is not None:
+            cur = np.concatenate(
+                [np.arange(r.start, r.end) for r in h.ranges()]) \
+                if h.ranges() else np.zeros((0,), np.int64)
+            if len(idx) != len(cur) or not np.array_equal(idx, cur):
+                raise ValueError(
+                    f"place {place} holds different indices than the "
+                    f"device shard — layout changed under the bridge")
+        off = 0
+        for r in h.ranges():
+            h.chunks[r] = np.asarray(rows[off:off + r.size])
+            off += r.size
+
     # -- relocation registration (paper §5.2, RangeRelocatable) ---------
     def move_range_at_sync(self, r: LongRange, dest: int, mm) -> None:
         mm.register_range_move(self, r, dest)
@@ -379,7 +427,7 @@ class DistBag(DistCollection):
         self.handle(dest).extend(payload)
 
     def _payload_nbytes(self, payload) -> int:
-        return int(sum(np.asarray(x).nbytes for x in payload)) + 16
+        return int(sum(_value_nbytes(x) for x in payload)) + 16
 
 
 class DistMap(DistCollection):
@@ -419,6 +467,44 @@ class DistMap(DistCollection):
     def for_each(self, place: int, fn: Callable[[Any, Any], None]) -> None:
         for k, v in list(self.handle(place).items()):
             fn(k, v)
+
+    # -- device bridge (values become device-resident payloads) ----------
+    def to_device(self, place: int, keys: Sequence | None = None) -> int:
+        """Bridge local values to device residency: every value (an
+        array or an arbitrary pytree of arrays) is ``device_put`` and
+        stored back in the handle, so subsequent relocation windows ship
+        device buffers — the serving tier's KV shards live here.
+        Returns the number of bytes now device-resident."""
+        import jax
+
+        h = self.handle(place)
+        moved = 0
+        for k in (list(h) if keys is None else keys):
+            v = h.get(k)
+            if v is None:
+                continue
+            dv = jax.device_put(v)
+            h[k] = dv
+            moved += sum(_value_nbytes(x)
+                         for x in jax.tree_util.tree_leaves(dv))
+        return moved
+
+    def from_device(self, place: int, keys: Sequence | None = None) -> int:
+        """Inverse bridge: pull device-resident values back to host
+        numpy (checkpointing / inspection path).  Returns bytes moved."""
+        import jax
+
+        h = self.handle(place)
+        moved = 0
+        for k in (list(h) if keys is None else keys):
+            v = h.get(k)
+            if v is None:
+                continue
+            hv = jax.tree_util.tree_map(np.asarray, v)
+            h[k] = hv
+            moved += sum(_value_nbytes(x)
+                         for x in jax.tree_util.tree_leaves(hv))
+        return moved
 
     # KeyRelocatable (paper §5.2): relocate by key→destination rule.
     def move_at_sync(self, place: int, rule: Callable[[Any], int], mm) -> None:
@@ -462,7 +548,7 @@ class DistMap(DistCollection):
         total = 16
         for k, v in payload:
             vv = v if isinstance(v, list) else [v]
-            total += 8 + sum(int(np.asarray(x).nbytes) for x in vv)
+            total += 8 + sum(_value_nbytes(x) for x in vv)
         return total
 
 

@@ -265,3 +265,16 @@ class RangeDistribution:
         pos_c = jnp.clip(pos, 0, len(starts) - 1)
         ok = (pos >= 0) & (idx < e[pos_c])
         return jnp.where(ok, o[pos_c], -1).astype(jnp.int32)
+
+    def lookup_host(self, idx) -> np.ndarray:
+        """Numpy twin of :meth:`lookup` (same semantics, same -1 for
+        unowned) for hosts that rebuild routing tables whose shapes
+        change every call — eager jnp would recompile per shape."""
+        starts, ends, owners = self.as_arrays()
+        idx = np.asarray(idx)
+        if len(starts) == 0:
+            return np.full(idx.shape, -1, np.int32)
+        pos = np.searchsorted(starts, idx, side="right") - 1
+        pos_c = np.clip(pos, 0, len(starts) - 1)
+        ok = (pos >= 0) & (idx < ends[pos_c])
+        return np.where(ok, owners[pos_c], -1).astype(np.int32)

@@ -307,12 +307,17 @@ class GlobalLoadBalancer:
     """
 
     def __init__(self, group: PlaceGroup | int, workload: Workload,
-                 config: GLBConfig | None = None):
+                 config: GLBConfig | None = None, *,
+                 on_finish: Callable[[AsyncRelocation], None] | None = None):
         if isinstance(group, int):
             group = PlaceGroup(group)
         self.group = group
         self.workload = workload
         self.cfg = config or GLBConfig()
+        # fires after a migration window's delivery + distribution
+        # reconciliation — the hook consumers (e.g. the serving Router's
+        # dispatch table) use to refresh exactly once per window
+        self.on_finish = on_finish
         self.n = group.size()
         # cfg.min_keep is the victim floor for BOTH paths: steal uses it
         # directly; rebalance transfers clamp in the workload, so push
@@ -404,6 +409,12 @@ class GlobalLoadBalancer:
                 self.workload, "last_transfer_count", decision.total_moved)
         return decision
 
+    def has_pending(self) -> bool:
+        """True while a launched migration window has not been finished
+        (its delivery barrier — and the ``on_finish`` hook — are still
+        ahead)."""
+        return self._pending is not None
+
     def finish(self) -> None:
         """Barrier for the in-flight relocation (no-op when idle).
 
@@ -420,6 +431,8 @@ class GlobalLoadBalancer:
         if pending.overlapped:
             self.stats.syncs_overlapped += 1
         self.last_trace = dict(pending.trace)
+        if self.on_finish is not None:
+            self.on_finish(pending)
 
     # -- lifeline stealing ------------------------------------------------
     def _serve(self, victim: int, thief: int) -> int:

@@ -25,7 +25,7 @@ import threading
 import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Callable
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -194,7 +194,13 @@ class CollectiveMoveManager:
         """Counts Alltoall + payload packing (runs off-thread under
         :meth:`sync_async`).  Extraction happens here: entries leave the
         source handles as soon as phase 1 runs, exactly like the eager
-        serialization of the paper's implementation."""
+        serialization of the paper's implementation.
+
+        The counts matrix only records bytes that cross places: a move
+        whose destination equals its source never reaches the wire, and
+        ``_deliver`` excludes it from ``last_payload_bytes`` — keeping
+        the diagonal zero is what makes the two §5.3 accounting surfaces
+        agree (``last_counts_matrix.sum() == last_payload_bytes``)."""
         range_moves, array_count_moves, bag_moves, key_moves = moves
         n = self.group.size()
         place_index = {p: i for i, p in enumerate(self.group.members)}
@@ -213,8 +219,9 @@ class CollectiveMoveManager:
                 raise KeyError(f"range {m.r} not held by any place in group")
             rows = m.collection._extract_range(m.r, src)
             payload = (m.r, rows)
-            nb = m.collection._payload_nbytes(payload)
-            counts[place_index[src], place_index[m.dest]] += nb
+            if src != m.dest:
+                nb = m.collection._payload_nbytes(payload)
+                counts[place_index[src], place_index[m.dest]] += nb
             payloads.append((m.collection, src, m.dest, payload))
 
         for m in array_count_moves:
@@ -226,8 +233,9 @@ class CollectiveMoveManager:
                 rr = LongRange(r.start, r.start + take)
                 rows = m.collection._extract_range(rr, m.src)
                 payload = (rr, rows)
-                nb = m.collection._payload_nbytes(payload)
-                counts[place_index[m.src], place_index[m.dest]] += nb
+                if m.src != m.dest:
+                    nb = m.collection._payload_nbytes(payload)
+                    counts[place_index[m.src], place_index[m.dest]] += nb
                 payloads.append((m.collection, m.src, m.dest, payload))
                 remaining -= take
             if remaining > 0:
@@ -236,8 +244,9 @@ class CollectiveMoveManager:
 
         for m in bag_moves:
             payload = m.collection._extract_count(m.src, m.count)
-            nb = m.collection._payload_nbytes(payload)
-            counts[place_index[m.src], place_index[m.dest]] += nb
+            if m.src != m.dest:
+                nb = m.collection._payload_nbytes(payload)
+                counts[place_index[m.src], place_index[m.dest]] += nb
             payloads.append((m.collection, m.src, m.dest, payload))
 
         for m in key_moves:
@@ -444,4 +453,7 @@ def spmd_relocate_back(y: jnp.ndarray, slot: jnp.ndarray, *, axis_name: str,
     safe = jnp.where(slot >= 0, slot, 0)
     out = flat[safe]
     mask_shape = (n,) + (1,) * (out.ndim - 1)
-    return jnp.where((slot >= 0).reshape(mask_shape), out, fill)
+    # cast fill to the payload dtype: a float default would otherwise
+    # promote integer/bf16 rows to float32 through jnp.where
+    return jnp.where((slot >= 0).reshape(mask_shape), out,
+                     jnp.asarray(fill, out.dtype))

@@ -7,17 +7,23 @@ Layers:
 * ``workload`` — :class:`TrafficWorkload`: the GLB ``Workload`` adapter
   keyed by decode-time EWMA × resident KV token budget.
 * ``router``   — :class:`Router`: dispatch against the live tracked
-  distribution, consistent across migrations and deaths.
+  distribution, consistent across migrations and deaths; batched
+  ``dispatch_batch`` over a per-window owner table.
 * ``elastic``  — :class:`ElasticServingDriver` / :class:`ServingSim`:
   the composed runtime (GLB + heartbeats + elastic world).
+* ``decode``   — :class:`DecodeEngine` / :class:`RealDecodeSim`: the
+  real data plane — measured jitted decode steps over device-resident
+  :class:`SeqKV` shards (no simulated decode times).
 """
-from .cache import Sequence, ServingPool
+from .cache import SeqKV, Sequence, ServingPool
+from .decode import DecodeEngine, RealDecodeSim, serving_config
 from .elastic import ElasticServingDriver, ServingSim
 from .router import Router
 from .workload import TokenCostModel, TrafficWorkload
 
 __all__ = [
-    "Sequence", "ServingPool",
+    "SeqKV", "Sequence", "ServingPool",
+    "DecodeEngine", "RealDecodeSim", "serving_config",
     "ElasticServingDriver", "ServingSim",
     "Router",
     "TokenCostModel", "TrafficWorkload",

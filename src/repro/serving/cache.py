@@ -7,18 +7,60 @@ free slots, and the level-extremes balancer relocates sequences between
 replicas when per-replica decode times drift — ``update_dist`` keeps the
 front-end router's table consistent (paper §4.4/§4.6: dispatch to moved
 agents keeps working).
+
+:class:`SeqKV` is the *device-resident* payload of the real-decode data
+plane: one sequence's fixed-schema slice of the jitted model's decode
+state (KV cache rows / recurrent states per layer) plus its current
+token, registered as a JAX pytree so ``DistMap.to_device`` bridges it to
+device buffers and relocation windows ship device shards.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Callable, Optional
 
+import jax
 import numpy as np
 
 from ..core import (CollectiveMoveManager, DistIdMap, LevelExtremes,
                     LoadBalancer, LongRange, PlaceGroup, RangeDistribution)
 
-__all__ = ["ServingPool", "Sequence"]
+__all__ = ["ServingPool", "Sequence", "SeqKV"]
+
+
+class SeqKV:
+    """One sequence's device-resident decode state + current token.
+
+    ``state`` is a batch-1 slice of the model's decode-state pytree;
+    ``token`` is the ``(1, 1)`` int32 token the next decode step
+    consumes.  The decode engine *mutates* these fields in place after
+    every step, so an entry extracted into an in-flight migration window
+    still carries the latest pages when it lands at its destination —
+    the object reference is the unit of relocation, the device buffers
+    are the payload.
+    """
+
+    __slots__ = ("state", "token")
+
+    def __init__(self, state, token):
+        self.state = state
+        self.token = token
+
+    @property
+    def nbytes(self) -> int:
+        """Payload size (what the §5.3 byte accounting reports) without
+        forcing a device→host transfer."""
+        return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(self)))
+
+    def on_device(self) -> bool:
+        return all(isinstance(x, jax.Array)
+                   for x in jax.tree_util.tree_leaves(self))
+
+
+jax.tree_util.register_pytree_node(
+    SeqKV,
+    lambda kv: ((kv.state, kv.token), None),
+    lambda _, children: SeqKV(*children))
 
 
 @dataclass

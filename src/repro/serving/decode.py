@@ -1,0 +1,303 @@
+"""Real-decode data plane: the jitted model behind the elastic driver.
+
+The ROADMAP's "Serving with real decode" item: instead of
+:class:`~repro.serving.elastic.ServingSim`'s modeled decode times, a
+:class:`DecodeEngine` runs ``models.transformer.decode_step`` (jitted,
+bucketized batch shapes) over each replica's resident sequences and
+reports *measured wall-clock* step times — the numbers that feed
+:class:`~repro.serving.workload.TrafficWorkload`'s decode-EWMA and the
+GLB's cost exchange, so rebalancing reacts to what the hardware actually
+did (DASH-style measured, not modeled, adaptivity).
+
+KV residency: every sequence's cache rows live in a :class:`SeqKV` — a
+batch-1 slice of the model's decode-state pytree held as *device
+buffers* inside the ``kv`` ``DistIdMap`` (bridged at admission through
+``DistMap.to_device``).  Each round the engine stacks the resident
+slices into one batch state, runs the jitted step, and writes the
+updated slices back into the same ``SeqKV`` objects — mutation in place,
+so a slice extracted into an in-flight migration window still lands with
+its freshest pages.  A GLB window therefore moves sequence metadata and
+device KV shards together through one ``sync_async``.
+
+:class:`RealDecodeSim` is the §6.3-style harness on top: a skewed
+cluster (``work[p]`` extra decode passes emulate a slow chip — the model
+really runs ``work`` times, wall-clock measured), Poisson arrivals, and
+lockstep rounds whose duration is the slowest live replica's measured
+time.  ``benchmarks/run.py serving_real_decode`` compares balanced vs
+unbalanced measured throughput on it.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Parallel, zoo
+from ..models import transformer as T
+from .cache import SeqKV
+
+__all__ = ["DecodeEngine", "RealDecodeSim", "serving_config"]
+
+
+def serving_config(*, n_layers: int = 2, d_model: int = 128,
+                   d_ff: int = 512, vocab_size: int = 1024):
+    """The reduced decoder-only config the serving examples/benchmarks
+    run (same family as ``examples/serve.py``)."""
+    from ..configs import get_config
+    return get_config("qwen2_1_5b").reduced(
+        n_layers=n_layers, d_model=d_model, d_ff=d_ff,
+        vocab_size=vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# per-sequence state slicing (batch axis differs per state section)
+# ---------------------------------------------------------------------------
+def _stack_states(states: list) -> dict:
+    """Batch-1 decode-state slices → one batch-B state.  ``pos`` /
+    ``prefix`` / ``suffix`` leaves carry batch on axis 0; scanned-period
+    leaves carry it on axis 1 (axis 0 is the layer period)."""
+    cat0 = lambda *xs: jnp.concatenate(xs, axis=0)
+    cat1 = lambda *xs: jnp.concatenate(xs, axis=1)
+    return {
+        "pos": cat0(*[s["pos"] for s in states]),
+        "prefix": jax.tree_util.tree_map(cat0, *[s["prefix"] for s in states]),
+        "suffix": jax.tree_util.tree_map(cat0, *[s["suffix"] for s in states]),
+        "scan": jax.tree_util.tree_map(cat1, *[s["scan"] for s in states]),
+    }
+
+
+def _unstack_state(state: dict, n: int) -> list:
+    """Inverse of :func:`_stack_states`: the first ``n`` batch slices."""
+    out = []
+    for i in range(n):
+        out.append({
+            "pos": state["pos"][i:i + 1],
+            "prefix": jax.tree_util.tree_map(
+                lambda a: a[i:i + 1], state["prefix"]),
+            "suffix": jax.tree_util.tree_map(
+                lambda a: a[i:i + 1], state["suffix"]),
+            "scan": jax.tree_util.tree_map(
+                lambda a: a[:, i:i + 1], state["scan"]),
+        })
+    return out
+
+
+class DecodeEngine:
+    """Jitted lockstep decode over per-sequence device KV slices.
+
+    One engine (model + params + jit cache) is shared by every replica —
+    a replica's step is ``decode_batch`` over *its* resident ``SeqKV``
+    list.  A replica decodes in micro-batches of at most ``max_batch``
+    sequences (the hardware slot limit of a real decoder): overflow runs
+    as additional sequential steps, so a replica's measured time grows
+    with its residency — the signal the traffic-keyed GLB balances on.
+    Micro-batch shapes are padded to power-of-two buckets so the jit
+    cache stays small (≤ log2(max_batch)+1 entries); each bucket is
+    warmed untimed on first use so compilation never pollutes a measured
+    decode time.
+    """
+
+    def __init__(self, cfg=None, *, s_cache: int = 128, max_batch: int = 8,
+                 seed: int = 0):
+        self.cfg = cfg if cfg is not None else serving_config()
+        if self.cfg.is_encoder_decoder:
+            raise ValueError("DecodeEngine serves decoder-only configs")
+        self.par = Parallel(mesh=None)
+        self.params = zoo.init_params(self.cfg, seed)
+        self.s_cache = s_cache
+        self.max_batch = int(max_batch)
+        self.rng = np.random.default_rng(seed)
+
+        def serve_step(params, state, tokens):
+            state, logits = T.decode_step(params, self.cfg, self.par,
+                                          state, tokens)
+            return state, jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+        self._step = jax.jit(serve_step)
+        # host-side batch-1 template: admission builds SeqKVs from this
+        # and the driver bridges them to device via ``kv.to_device``
+        self._template = jax.tree_util.tree_map(
+            np.asarray, T.init_decode_state(self.cfg, 1, s_cache))
+        self._pad_state = jax.device_put(
+            jax.tree_util.tree_map(np.copy, self._template))
+        self._pad_token = jnp.zeros((1, 1), jnp.int32)
+        self._warm: set[int] = set()
+        self.steps = 0
+        self.tokens_decoded = 0
+
+    # -- admission ---------------------------------------------------------
+    def new_seq(self, prompt_len: int) -> SeqKV:
+        """Fresh host-side :class:`SeqKV`: empty cache, position advanced
+        past the prompt, a random start token.  Host numpy on purpose —
+        ``DistMap.to_device`` is the bridge that makes it a device shard.
+        """
+        state = jax.tree_util.tree_map(np.copy, self._template)
+        state["pos"] = np.full((1,), int(prompt_len), np.int32)
+        token = np.asarray(
+            self.rng.integers(0, self.cfg.vocab_size, (1, 1)), np.int32)
+        return SeqKV(state, token)
+
+    def _bucket(self, n: int) -> int:
+        return 1 << max(n - 1, 0).bit_length()
+
+    # -- the measured lockstep step ---------------------------------------
+    def decode_batch(self, seq_kvs: list, *, work: int = 1) -> float:
+        """One decode step for every sequence in ``seq_kvs`` (mutated in
+        place with updated state/token); returns the *measured* seconds
+        the jitted model spent.  Sequences beyond ``max_batch`` decode
+        as additional sequential micro-batch steps — a replica over its
+        slot limit pays for it in wall clock, exactly what the balancer
+        should see.  ``work`` repeats each step that many times
+        (slow-chip emulation: the compute really runs) while the
+        sequences still advance a single token."""
+        n = len(seq_kvs)
+        if n == 0:
+            return 0.0
+        prepared = []   # (chunk, stacked state, tokens) — built untimed
+        for lo in range(0, n, self.max_batch):
+            chunk = seq_kvs[lo:lo + self.max_batch]
+            bucket = self._bucket(len(chunk))
+            pad = bucket - len(chunk)
+            state = _stack_states([kv.state for kv in chunk]
+                                  + [self._pad_state] * pad)
+            tokens = jnp.concatenate(
+                [jnp.asarray(kv.token) for kv in chunk]
+                + [self._pad_token] * pad, axis=0)
+            if bucket not in self._warm:   # compile untimed
+                jax.block_until_ready(self._step(self.params, state, tokens))
+                self._warm.add(bucket)
+            prepared.append((chunk, state, tokens))
+        # drain the async dispatch queue (stacking above, unstacking from
+        # earlier calls) so the timed window measures *this* decode only
+        jax.block_until_ready([s for _, s, _ in prepared])
+        t0 = time.perf_counter()
+        outs = []
+        for _, state, tokens in prepared:
+            for _ in range(max(int(work), 1)):
+                out = self._step(self.params, state, tokens)
+            outs.append(out)
+        jax.block_until_ready(outs)
+        dt = time.perf_counter() - t0
+        for (chunk, _, _), (out_state, out_tokens) in zip(prepared, outs):
+            for i, (kv, new_state) in enumerate(
+                    zip(chunk, _unstack_state(out_state, len(chunk)))):
+                kv.state = new_state
+                kv.token = out_tokens[i:i + 1]
+        self.steps += 1
+        self.tokens_decoded += n
+        return dt
+
+
+# ---------------------------------------------------------------------------
+# skewed-cluster harness on the real data plane
+# ---------------------------------------------------------------------------
+@dataclass
+class RealDecodeSim:
+    """Lockstep serving rounds against :class:`DecodeEngine`.
+
+    Replica ``p`` runs ``work[p]`` jitted decode passes per round (an
+    honestly-slow chip); the round's simulated duration is the slowest
+    live replica's *measured* time.  ``work_from`` delays the skew — the
+    §6.3 "disturbed cluster" shape: sequences place evenly while the
+    cluster is even, then a chip degrades mid-run and only *relocation*
+    can move the residents off it (admission only steers new arrivals).
+    Pass a shared ``engine`` so balanced/unbalanced comparisons reuse
+    one jit cache.
+    """
+
+    n_replicas: int = 4
+    slots: int = 16
+    work: tuple = ()                 # per-replica decode passes per round
+    work_from: int = 0               # round at which the skew activates
+    preload: tuple = ()              # (replica, count): hot-shard residency
+    preload_max_new: tuple = (48, 64)
+    arrival_rate: float = 3.0
+    prompt_range: tuple = (8, 48)
+    max_new_range: tuple = (8, 24)
+    fail_at: dict = field(default_factory=dict)
+    glb_period: int = 4
+    policy: str = "proportional"
+    balance: bool = True
+    heartbeat_timeout: int = 2
+    seed: int = 0
+    engine: DecodeEngine | None = None
+
+    def __post_init__(self):
+        from ..core import GLBConfig
+        from .elastic import ElasticServingDriver
+        if self.engine is None:
+            self.engine = DecodeEngine()
+        period = self.glb_period if self.balance else 10 ** 9
+        self.driver = ElasticServingDriver(
+            self.n_replicas, slots_per_replica=self.slots,
+            glb=GLBConfig(period=period, policy=self.policy, ema=0.3,
+                          asynchronous=True),
+            heartbeat_timeout=self.heartbeat_timeout,
+            engine=self.engine)
+        if not self.work:
+            self.work = (1,) * self.n_replicas
+        self.rng = np.random.default_rng(self.seed)
+        if self.preload:
+            # skewed residency (a hot tenant / sticky-session pathology):
+            # long-lived sequences pinned to one replica — admission only
+            # steers *new* arrivals, so spreading these is relocation's job
+            replica, count = self.preload
+            for _ in range(count):
+                self.driver.admit(int(self.rng.integers(*self.prompt_range)),
+                                  int(self.rng.integers(
+                                      *self.preload_max_new)),
+                                  place=replica)
+        self.failed: set[int] = set()
+        self.round_times: list[float] = []   # slowest live replica, measured
+        self.round_tokens: list[int] = []
+        self.tokens = 0
+        self.iter = 0
+
+    def run(self, rounds: int) -> "RealDecodeSim":
+        d = self.driver
+        for _ in range(rounds):
+            if self.iter in self.fail_at:
+                self.failed.add(self.fail_at[self.iter])
+            for _ in range(self.rng.poisson(self.arrival_rate)):
+                d.admit(int(self.rng.integers(*self.prompt_range)),
+                        int(self.rng.integers(*self.max_new_range)))
+            w = self.work if self.iter >= self.work_from else None
+            info = d.decode_round(failed=self.failed, work=w)
+            t = info["decode_s"]
+            finite = t[np.isfinite(t)]
+            self.round_times.append(float(finite.max()) if len(finite) else 0.0)
+            self.round_tokens.append(info["decoded"])
+            self.tokens += info["decoded"]
+            self.iter += 1
+        d.sync()
+        return self
+
+    def throughput(self, *, trim: float = 0.1, skip: int = 0,
+                   until: int | None = None) -> float:
+        """Tokens per second of simulated-concurrent serving: replicas
+        decode in parallel, so a round costs its slowest measured time.
+
+        Wall-clock maxima are noise amplifiers — one scheduler hiccup on
+        any replica sets that round's time — so the ``trim`` fraction of
+        slowest rounds is dropped *with their tokens* before dividing
+        (a trimmed estimator, not a thumb on the scale: both sides of a
+        comparison shed their outliers the same way).  ``skip``/``until``
+        bound the measured window — e.g. the recovery transient after a
+        disturbance: before it the runs are identical, and long after it
+        retirement drains the skew even without relocation, so both
+        tails only dilute the comparison."""
+        times = np.asarray(self.round_times[skip:until])
+        toks = np.asarray(self.round_tokens[skip:until], np.float64)
+        if len(times) == 0:
+            return 0.0
+        keep = len(times) - int(trim * len(times))
+        order = np.argsort(times)[:max(keep, 1)]
+        wall = float(times[order].sum())
+        return float(toks[order].sum()) / wall if wall > 0 else 0.0
+
+    def window_p95(self) -> list[float]:
+        from .elastic import window_p95
+        return window_p95(self.round_times, self.glb_period)

@@ -23,6 +23,12 @@ serving items call for:
 speed) with an arrival process and a failure schedule — the §6.3
 "disturbed cluster" methodology transplanted to serving, used by
 ``tests/test_serving.py`` and the ``serving_*`` benchmark rows.
+
+The *real* data plane swaps the model for measurement: construct the
+driver with ``engine=DecodeEngine()`` and call :meth:`decode_round` —
+the jitted ``decode_step`` runs every replica's resident batch over
+device-resident ``SeqKV`` shards and the measured wall-clock times feed
+the same EWMA/GLB path (see ``serving/decode.py``).
 """
 from __future__ import annotations
 
@@ -36,7 +42,16 @@ from .cache import Sequence
 from .router import Router
 from .workload import TokenCostModel, TrafficWorkload
 
-__all__ = ["ElasticServingDriver", "ServingSim"]
+__all__ = ["ElasticServingDriver", "ServingSim", "window_p95"]
+
+
+def window_p95(step_times, window: int) -> list[float]:
+    """Per-window p95 of lockstep round times (windows = GLB periods) —
+    shared by the simulated and real-decode harnesses."""
+    w = max(int(window), 1)
+    times = np.asarray(step_times)
+    return [float(np.percentile(times[i:i + w], 95))
+            for i in range(0, len(times) - w + 1, w)]
 
 
 class ElasticServingDriver:
@@ -45,9 +60,14 @@ class ElasticServingDriver:
 
     def __init__(self, n_replicas: int, *, slots_per_replica: int = 32,
                  glb: GLBConfig | None = None, heartbeat_timeout: int = 2,
-                 page_tokens: int = 16, traffic_ema: float = 0.5):
+                 page_tokens: int = 16, traffic_ema: float = 0.5,
+                 engine=None, admission: str = "traffic"):
+        if admission not in ("traffic", "count"):
+            raise ValueError(f"unknown admission policy {admission!r}")
         self.group = PlaceGroup(n_replicas)
         self.slots = slots_per_replica
+        self.engine = engine           # real data plane (serving.decode)
+        self.admission = admission
         self.seqs = DistIdMap(self.group)
         self.kv = DistIdMap(self.group)
         for p in self.group.members:   # eager handles: empty != unknown
@@ -57,39 +77,84 @@ class ElasticServingDriver:
         self.workload = TrafficWorkload(self.seqs, self.kv,
                                         cost_model=self.cost,
                                         ema=traffic_ema)
+        self.router = Router(self.seqs)
         self.glb = GlobalLoadBalancer(
             self.group, self.workload,
-            glb or GLBConfig(period=4, policy="proportional", ema=0.3))
+            glb or GLBConfig(period=4, policy="proportional", ema=0.3),
+            on_finish=self._window_finished)
         self.monitor = HeartbeatMonitor(n_replicas,
                                         timeout_steps=heartbeat_timeout)
         self.world = ElasticWorld(self.group)
-        self.router = Router(self.seqs)
         self.next_id = 0
         self.admitted = 0
         self.completed: list[int] = []
         self.evicted: list[int] = []
         self.rehomed_seqs = 0
         self._kv_gc: set[int] = set()   # retired seqs whose KV is in flight
+        self._refreshes = 0             # window-boundary refreshes fired
+        self._admit_traffic = None      # per-round cache of workload.loads()
+
+    def _window_finished(self, handle) -> None:
+        """A migration window delivered and reconciled the tracked
+        distributions: reap orphaned KV and rebuild the router's dispatch
+        table — once per window, not per request (Router at scale)."""
+        self._refreshes += 1
+        self._collect_orphaned_kv()
+        self.router.refresh()
 
     # -- admission (alive replicas only) ----------------------------------
-    def admit(self, prompt_len: int, max_new: int = 64) -> int | None:
-        """Admit one request onto the least-loaded replica of the
-        *current* place group; None when every live replica is full."""
+    def admit(self, prompt_len: int, max_new: int = 64,
+              place: int | None = None) -> int | None:
+        """Admit one request onto the least-*traffic* replica of the
+        current place group (EWMA-weighted load — the same units the GLB
+        balances); None when every live replica is full.  Placing by raw
+        sequence count would fight the balancer: a slow replica that
+        just shed its sequences is exactly the one raw counts would
+        refill.  ``place`` pins the placement (a sticky-session router,
+        or a skewed-arrival harness); ``admission="count"`` at
+        construction restores the raw-count policy."""
         members = list(self.group.members)
-        loads = [self.seqs.local_size(p) for p in members]
-        i = int(np.argmin(loads))
-        if loads[i] >= self.slots:
-            return None
-        p = members[i]               # argmin is an index, not a place id
+        counts = np.asarray([self.seqs.local_size(p) for p in members])
+        if place is not None:
+            if place not in self.group:
+                raise KeyError(f"place {place} not in {self.group}")
+            i = members.index(place)
+            if counts[i] >= self.slots:
+                return None
+        else:
+            if self.admission == "traffic":
+                # loads() walks every resident sequence — compute once
+                # per decode round (step() invalidates), not per request;
+                # the count tiebreak still spreads a same-round burst
+                if self._admit_traffic is None:
+                    self._admit_traffic = self.workload.loads()
+                traffic = self._admit_traffic
+                tr = np.asarray([traffic[self.workload.members.index(p)]
+                                 for p in members], np.float64)
+            else:
+                tr = counts.astype(np.float64)
+            for i in np.lexsort((counts, tr)):  # least traffic, then count
+                if counts[i] < self.slots:
+                    break
+            else:
+                return None
+        p = members[i]               # a members index, not a place id
         sid = self.next_id
         self.next_id += 1
         seq = Sequence(sid, prompt_len, max_new=max_new)
         self.seqs.put(p, sid, seq)
-        # KV token budget allocated up front (prompt + generation room)
-        budget = self.cost.pages(
-            Sequence(sid, prompt_len, generated=max_new))
-        self.kv.put(p, sid, np.zeros((budget, self.cost.page_tokens),
-                                     np.float32))
+        if self.engine is not None:
+            # real data plane: the KV payload is a batch-1 slice of the
+            # jitted model's decode state, bridged to device buffers —
+            # migration windows ship device shards from here on
+            self.kv.put(p, sid, self.engine.new_seq(prompt_len))
+            self.kv.to_device(p, keys=(sid,))
+        else:
+            # KV token budget allocated up front (prompt + generation room)
+            budget = self.cost.pages(
+                Sequence(sid, prompt_len, generated=max_new))
+            self.kv.put(p, sid, np.zeros((budget, self.cost.page_tokens),
+                                         np.float32))
         self.admitted += 1
         return sid
 
@@ -103,6 +168,7 @@ class ElasticServingDriver:
         and are evicted once the monitor times them out.
         """
         info: dict = {}
+        self._admit_traffic = None     # residency changes this round
         failed = set(failed)
         for p in self.group.members:
             if p not in failed:
@@ -142,11 +208,58 @@ class ElasticServingDriver:
         t = np.asarray(decode_times, np.float64)
         self.workload.observe(t)
         self.glb.record_all(np.where(np.isfinite(t), t, 0.0))
+        before = self._refreshes
         decision = self.glb.step()
         if decision is not None:
             info["rebalance"] = decision
-        self._collect_orphaned_kv()
-        self.router.refresh()
+            if not self.glb.has_pending() and self._refreshes == before:
+                # window boundary with nothing in flight (zero moves, or
+                # every move clamped away) and no delivery barrier fired
+                # inside glb.step(): refresh here — otherwise a balanced
+                # cluster would never pick up new admissions.  Orphaned
+                # KV can only surface at a delivery, so the boundary
+                # hooks cover collection too.
+                self._window_finished(None)
+        return info
+
+    # -- one real decode round (the measured data plane) -------------------
+    def decode_round(self, failed=(), work=None) -> dict:
+        """Advance one lockstep round against the real
+        :class:`~repro.serving.decode.DecodeEngine`: every live replica
+        decodes its resident batch through the jitted model, and the
+        *measured* per-replica wall-clock times feed the traffic EWMA and
+        the GLB cost exchange (no simulated decode times anywhere).
+
+        ``work[i]`` (aligned to the initial member order) repeats
+        replica ``i``'s decode that many times — a slow chip whose extra
+        compute really runs.  Returns the :meth:`step` info dict plus
+        ``decode_s`` (measured seconds per member) and ``decoded``
+        (sequences advanced)."""
+        if self.engine is None:
+            raise ValueError("decode_round needs an engine "
+                             "(ElasticServingDriver(..., engine=...))")
+        members = self.workload.members
+        t = np.full(len(members), np.nan)
+        decoded = 0
+        failed = set(failed)
+        for i, p in enumerate(members):
+            if p not in self.group or p in failed:
+                continue
+            seqh = self.seqs.handle(p)
+            kvh = self.kv.handle(p)
+            batch = []
+            for sid in list(kvh):
+                # an in-flight migration window extracts entries on its
+                # background thread — decode only pairs still resident
+                kv = kvh.get(sid)
+                if kv is not None and seqh.get(sid) is not None:
+                    batch.append(kv)
+            w = 1 if work is None else int(work[i])
+            t[i] = self.engine.decode_batch(batch, work=w)
+            decoded += len(batch)
+        info = self.step(t, failed=failed)
+        info["decode_s"] = t
+        info["decoded"] = decoded
         return info
 
     def _collect_orphaned_kv(self) -> None:
@@ -159,12 +272,15 @@ class ElasticServingDriver:
                     break
 
     def _evict(self, dead: int) -> None:
-        """The fault-tolerant-GLB path: settle the in-flight window, stop
-        routing to the dead replica, re-home its sequences + KV pages on
+        """The fault-tolerant-GLB path: stop routing to the dead replica,
+        settle the in-flight window, re-home its sequences + KV pages on
         the survivors, drop it from the lifeline graph, and shrink the
-        place group."""
-        self.glb.finish()
+        place group.  ``mark_dead`` comes first: the window barrier fires
+        a router refresh, which must not re-drive parked retries onto the
+        replica being evicted."""
+        self._admit_traffic = None
         self.router.mark_dead(dead)
+        self.glb.finish()
         before = self.seqs.local_size(dead) if dead in self.group else 0
         self.group = self.world.evict(dead, (self.seqs, self.kv))
         self.glb.evict_place(self.workload.members.index(dead))
@@ -219,6 +335,7 @@ class ServingSim:
     balance: bool = True
     heartbeat_timeout: int = 2
     page_tokens: int = 16
+    admission: str = "traffic"
     seed: int = 0
 
     def __post_init__(self):
@@ -228,7 +345,7 @@ class ServingSim:
             glb=GLBConfig(period=period, policy=self.policy, ema=0.3,
                           asynchronous=True),
             heartbeat_timeout=self.heartbeat_timeout,
-            page_tokens=self.page_tokens)
+            page_tokens=self.page_tokens, admission=self.admission)
         if not self.speeds:
             self.speeds = (1.0,) * self.n_replicas
         self.rng = np.random.default_rng(self.seed)
@@ -263,7 +380,4 @@ class ServingSim:
 
     # -- window statistics (windows = GLB periods) -------------------------
     def window_p95(self) -> list[float]:
-        w = max(self.glb_period, 1)
-        times = np.asarray(self.step_times)
-        return [float(np.percentile(times[i:i + w], 95))
-                for i in range(0, len(times) - w + 1, w)]
+        return window_p95(self.step_times, self.glb_period)

@@ -99,6 +99,21 @@ class TrafficWorkload:
         return (self.seqs.local_size(member)
                 if member in self.seqs.group else 0)
 
+    def kv_bytes_of(self, member: int) -> int:
+        """Bytes of KV payload resident at ``member`` — counted without
+        pulling device shards to host (real data plane: the values are
+        ``SeqKV`` pytrees of device buffers)."""
+        if self.kv is None or member not in self.kv.group:
+            return 0
+        from ..core.collections import _value_nbytes
+        h = self.kv.handle(member)
+        total = 0
+        for k in list(h):
+            v = h.get(k)
+            if v is not None:
+                total += _value_nbytes(v)
+        return total
+
     def loads(self) -> np.ndarray:
         """Integer traffic units per member: EWMA × resident KV pages,
         normalized so an even cluster reports plain page budgets."""

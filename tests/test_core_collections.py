@@ -61,6 +61,40 @@ class TestRangeDistribution:
         assert int(d.lookup(np.array([200]))[0]) == -1
 
 
+class TestSpmdRelocateDtypes:
+    """spmd_relocate_back must hand rows back in their payload dtype —
+    a float ``fill`` default must not promote int/bf16 rows (runs on a
+    1-device mesh so the fast tier covers it; the multi-device
+    round-trip lives in the slow SPMD tier)."""
+
+    @pytest.mark.parametrize("dtype", ["int32", "bfloat16", "float32"])
+    def test_roundtrip_preserves_dtype(self, dtype):
+        from functools import partial
+
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+
+        from repro.compat import make_mesh, shard_map
+        from repro.core import spmd_relocate, spmd_relocate_back
+
+        mesh = make_mesh((1,), ("x",))
+        x = np.arange(16).reshape(16, 1).astype(jnp.dtype(dtype))
+        dest = np.zeros(16, np.int32)
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("x"), P("x")),
+                 out_specs=P("x"))
+        def roundtrip(xl, dl):
+            out = spmd_relocate(xl, dl, axis_name="x", capacity=8)
+            return spmd_relocate_back(out["recv"], out["slot"],
+                                      axis_name="x", capacity=8, fill=-1)
+        back = roundtrip(x, dest)
+        assert back.dtype == jnp.dtype(dtype)
+        got = np.asarray(back.astype(jnp.float32)).ravel()
+        # capacity 8 < 16 rows: kept rows round-trip, dropped rows fill
+        np.testing.assert_array_equal(got[:8], np.arange(8, dtype=np.float32))
+        np.testing.assert_array_equal(got[8:], -np.ones(8, np.float32))
+
+
 class TestRelocation:
     def test_range_move_preserves_values(self):
         g, col = make_col()
@@ -96,6 +130,46 @@ class TestRelocation:
         m = mm.last_counts_matrix
         assert m[0, 1] > 0 and m.sum() == m[0, 1]
 
+    def test_accounting_surfaces_agree(self):
+        """§5.3 invariant: the counts matrix and the payload-byte total
+        describe the same wire traffic."""
+        g, col = make_col()
+        bag = DistBag(g)
+        bag.put_batch(0, [np.ones(4)] * 6)
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(0, 10), 1, mm)
+        col.move_at_sync_count(2, 5, 3, mm)
+        bag.move_at_sync_count(0, 4, 2, mm)
+        mm.sync()
+        assert mm.last_payload_bytes > 0
+        assert mm.last_counts_matrix.sum() == mm.last_payload_bytes
+
+    def test_accounting_skips_self_moves(self):
+        """A move whose destination equals its source never reaches the
+        wire: neither surface may count it (the diagonal stays zero)."""
+        g, col = make_col()
+        bag = DistBag(g)
+        bag.put_batch(1, [np.ones(4)] * 6)
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(0, 10), 0, mm)   # self: 0 holds it
+        col.move_at_sync_count(2, 5, 2, mm)               # self
+        bag.move_at_sync_count(1, 4, 1, mm)               # self
+        col.move_range_at_sync(LongRange(30, 35), 3, mm)  # real: 1 -> 3
+        mm.sync()
+        m = mm.last_counts_matrix
+        assert np.diagonal(m).sum() == 0
+        assert m.sum() == mm.last_payload_bytes > 0
+        assert col.global_size() == 120 and bag.local_size(1) == 6
+
+    def test_register_drain_annotations_resolve(self):
+        """register_drain's ``Sequence[int]`` annotation must resolve
+        (typing.Sequence import) for get_type_hints/strict tooling."""
+        import typing
+
+        from repro.core.relocation import CollectiveMoveManager as CMM
+        hints = typing.get_type_hints(CMM.register_drain)
+        assert hints["dests"] == typing.Sequence[int]
+
     def test_multi_collection_single_sync(self):
         g, col = make_col()
         bag = DistBag(g)
@@ -105,6 +179,54 @@ class TestRelocation:
         bag.move_at_sync_count(0, 3, 1, mm)
         mm.sync()
         assert bag.local_size(1) == 3 and col.get_distribution() is not None
+
+    def test_device_payloads_relocate_without_host_copy(self):
+        """Device-resident map values ride a relocation window as
+        ``jax.Array`` payloads, and byte accounting reads their sizes
+        without forcing a transfer."""
+        import jax
+
+        g = PlaceGroup(2)
+        m = DistMap(g)
+        for i in range(4):
+            m.put(0, f"k{i}", np.arange(8, dtype=np.float32))
+        moved = m.to_device(0)
+        assert moved == 4 * 8 * 4
+        assert all(isinstance(m.get(0, k), jax.Array) for k in m.keys(0))
+        mm = CollectiveMoveManager(g)
+        m.move_at_sync(0, lambda k: 1, mm)
+        mm.sync()
+        assert m.local_size(1) == 4
+        assert all(isinstance(m.get(1, k), jax.Array) for k in m.keys(1))
+        assert mm.last_payload_bytes >= 4 * 8 * 4
+        assert m.from_device(1) == 4 * 8 * 4
+        assert isinstance(m.get(1, "k0"), np.ndarray)
+
+    def test_dist_array_device_bridge_roundtrip(self):
+        import jax
+
+        g, col = make_col(n_places=2, n=40)
+        shard, idx = col.to_device(0)
+        assert isinstance(shard, jax.Array) and shard.shape[0] == 20
+        col.from_device(0, np.asarray(shard) * 2.0, idx)
+        assert float(col.get(0, 10)[0]) == 20.0
+        np.testing.assert_array_equal(idx, np.arange(20))
+        with pytest.raises(ValueError, match="layout changed"):
+            col.from_device(0, np.zeros((3, 3)))
+
+    def test_from_device_catches_equal_sized_swap(self):
+        """A relocation swapping equal-sized ranges between to_device and
+        from_device must be caught by the idx check (the row count alone
+        cannot see it)."""
+        g, col = make_col(n_places=2, n=40)
+        shard, idx = col.to_device(0)
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(0, 10), 1, mm)   # 10 rows out...
+        col.move_range_at_sync(LongRange(20, 30), 0, mm)  # ...10 rows in
+        mm.sync()
+        assert col.local_size(0) == 20                    # same count
+        with pytest.raises(ValueError, match="different indices"):
+            col.from_device(0, np.asarray(shard), idx)
 
     def test_rotation_listing12(self):
         """Paper Listing 12: bulk + range + rule in one sync."""
