@@ -94,13 +94,19 @@ def bench_plham():
                 f"reloc_bytes={sim.relocated}")
 
 
-def bench_glb(only=None):
+def bench_glb(only=None, smoke=False):
     """GLB vs no-lb on the paper's cluster profiles, plus steal latency.
 
     ``glb_disturbed`` is the acceptance row: improvement_x reports the
     simulated iteration-time gain over no-lb, and overlap/counts_dt_us
     report the host-side sync_async trace (phase-1 counts exchange
     completing before the finish() barrier = overlapped compute).
+
+    ``glb_device_steal`` is the device-data-plane acceptance row: the
+    jit-resident steal loop (one jitted call, zero host round-trips)
+    against the host ``steal_pass`` loop on the disturbed-cluster
+    profile's hot-shard shape — same config, asserted-identical final
+    distribution, measured wall-clock speedup.
     """
     from repro.core import (ClusterSim, DistArray, DistArrayWorkload,
                             GLBConfig, GlobalLoadBalancer, LongRange,
@@ -132,6 +138,63 @@ def bench_glb(only=None):
             f"overlap={st.overlap_fraction:.2f};"
             f"counts_dt_us={counts_dt:.0f};moved={st.entries_rebalanced};"
             f"reloc_bytes={st.bytes_moved}")
+    if not only or "glb_device_steal" in only:
+        # ISSUE 4 acceptance: the jit-resident steal loop vs the host
+        # steal path on the §6.3 disturbed-cluster shape (8 places, 1600
+        # entries) with a hot shard — every entry starts on place 0, the
+        # lifeline steal spreads them.  Both paths run the *same*
+        # deterministic policy (random_steal_attempts=0) and the final
+        # per-place distribution must match exactly; the derived column
+        # reports the measured wall-clock ratio.
+        n_places, entries = (8, 400) if smoke else (8, 1600)
+
+        def hot_shard():
+            g = PlaceGroup(n_places)
+            col = DistArray(g, track=True)
+            col.add_chunk(0, LongRange(0, entries),
+                          np.arange(entries, dtype=np.float64)[:, None])
+            for p in g.members:
+                col.handle(p)
+            return g, col
+
+        cfg = lambda: GLBConfig(lifeline="hypercube",  # noqa: E731
+                                random_steal_attempts=0)
+        g, col = hot_shard()   # warm the jit cache untimed
+        GlobalLoadBalancer(g, DistArrayWorkload(col), cfg(),
+                           device_loop=True).steal_loop()
+
+        def timed(device):
+            best = None
+            for _ in range(3):   # best-of-3: scheduler noise rejection
+                gg, cc = hot_shard()
+                glb = GlobalLoadBalancer(gg, DistArrayWorkload(cc), cfg(),
+                                         device_loop=device)
+                t0 = time.perf_counter()
+                res = glb.steal_loop(max_rounds=12)
+                us = (time.perf_counter() - t0) * 1e6
+                if best is None or us < best[0]:
+                    best = (us, res, gg, cc)
+            return best
+
+        dev_us, res_d, g_d, col_d = timed(True)
+        host_us, res_h, g_h, col_h = timed(False)
+        loads_d = [col_d.local_size(p) for p in g_d.members]
+        loads_h = [col_h.local_size(p) for p in g_h.members]
+        assert loads_d == loads_h, \
+            f"device/host distributions diverged: {loads_d} vs {loads_h}"
+        assert res_d["stolen"] == res_h["stolen"] \
+            and res_d["rounds"] == res_h["rounds"]
+        assert col_d.global_size() == entries, "device steal lost entries"
+        speedup = host_us / max(dev_us, 1e-9)
+        # the device loop must beat the host steal path (smoke tolerates
+        # CI timer noise on a tiny scenario)
+        assert speedup >= (0.5 if smoke else 1.0), \
+            f"device steal {dev_us:.0f}us slower than host {host_us:.0f}us"
+        row("glb_device_steal", dev_us,
+            f"host_us={host_us:.0f};speedup_x={speedup:.2f};"
+            f"rounds={res_d['rounds']};stolen={res_d['stolen']};"
+            f"min_load={min(loads_d)};parity=1")
+
     if only and not any(s.startswith("glb_steal_latency") for s in only):
         return
     topos = ("ring", "hypercube")
@@ -294,41 +357,104 @@ def bench_serving(only=None, smoke=False):
             f"survivors={len(d.group.members)}")
 
 
-def bench_relocation():
-    from repro.core import (CollectiveMoveManager, DistArray, LongRange,
-                            PlaceGroup)
-    n, width = 200_000, 8
-    g = PlaceGroup(8)
-    col = DistArray(g, track=True)
-    rows = np.random.default_rng(0).normal(size=(n, width))
-    for p, r in enumerate(LongRange(0, n).split(8)):
-        col.add_chunk(p, r, rows[r.start:r.end])
+def bench_relocation(only=None, smoke=False):
+    from repro.core import (CollectiveMoveManager, DistArray, DistIdMap,
+                            LongRange, PlaceGroup)
+    if only:
+        only = [s for s in only if s != "reloc"] or None
 
-    def do_moves():
-        mm = CollectiveMoveManager(g)
+    if not only or "reloc_host_16k_entries" in only:
+        n, width = 200_000, 8
+        g = PlaceGroup(8)
+        col = DistArray(g, track=True)
+        rows = np.random.default_rng(0).normal(size=(n, width))
+        for p, r in enumerate(LongRange(0, n).split(8)):
+            col.add_chunk(p, r, rows[r.start:r.end])
+
+        def do_moves():
+            mm = CollectiveMoveManager(g)
+            for p in range(8):
+                col.move_at_sync_count(p, 2000, (p + 1) % 8, mm)
+            mm.sync()
+            col.update_dist()
+
+        us = _t(do_moves, n=3)
+        bytes_per_sync = 8 * 2000 * width * 8
+        row("reloc_host_16k_entries", us,
+            f"GBps={bytes_per_sync / us / 1e3:.2f}")
+
+    if not only or "reloc_spmd_pack_16k" in only:
+        # SPMD half: jit cost of the capacity pack (the compute half of
+        # the device-side Alltoallv); collective timing needs real links
+        import jax
+        import jax.numpy as jnp
+        from repro.core.relocation import _pack_by_dest
+        width = 8
+        rows = np.random.default_rng(0).normal(size=(16384, width))
+        x = jnp.asarray(rows.astype(np.float32))
+        dest = jnp.asarray(np.random.default_rng(1).integers(0, 64, 16384),
+                           dtype=jnp.int32)
+        pack = jax.jit(lambda x, d: _pack_by_dest(x, d, 64, 512)[0])
+        pack(x, dest).block_until_ready()
+        us = _t(lambda: pack(x, dest).block_until_ready(), n=5)
+        row("reloc_spmd_pack_16k", us,
+            f"GBps={16384 * width * 4 / us / 1e3:.2f}")
+
+    if not only or "reloc_pipeline_depth2" in only:
+        # ISSUE 4 acceptance: double-buffered windows
+        # (sync_async(depth=2)) vs the single-window pipeline on a
+        # hot-shard serving shape — two co-partitioned DistIdMaps (seq
+        # metadata + KV pages) ping-pong a key block between replicas
+        # while the caller computes.  depth=1 pays delivery +
+        # distribution reconciliation on the barrier; depth=2 runs them
+        # on the background delivery thread under the next window's
+        # compute.  Same moves, asserted-identical final state; the
+        # derived column reports the measured wall-clock ratio.
+        # the compute window is sized above phase1+phase2 so the
+        # background delivery fully hides under it (python phases share
+        # the GIL with nothing else while the caller sleeps); the
+        # depth-1 baseline pays phase 2 on top of the same compute
+        keys, windows, compute_s = (1500, 3, 0.03) if smoke \
+            else (3000, 6, 0.06)
+
+        def run_pipeline(depth):
+            g = PlaceGroup(8)
+            seqs, kv = DistIdMap(g), DistIdMap(g)
+            for p in g.members:
+                seqs.handle(p)
+                kv.handle(p)
+            for k in range(keys):
+                seqs.put(0, k, np.zeros(4, np.float32))
+                kv.put(0, k, np.zeros((4, 16), np.float32))
+            mm = CollectiveMoveManager(g)
+            block = frozenset(range(keys // 2))
+            t0 = time.perf_counter()
+            for w in range(windows):
+                src, dst = (0, 1) if w % 2 == 0 else (1, 0)
+                rule = lambda k, s=src, d=dst: d if k in block else s  # noqa: E731
+                seqs.move_at_sync(src, rule, mm)
+                kv.move_at_sync(src, rule, mm)
+                mm.sync_async(update_dists=(seqs, kv), depth=depth)
+                time.sleep(compute_s)          # the caller's decode round
+            mm.drain()
+            return time.perf_counter() - t0, seqs, kv
+
+        t1, s1, k1 = run_pipeline(1)
+        t2, s2, k2 = run_pipeline(2)
         for p in range(8):
-            col.move_at_sync_count(p, 2000, (p + 1) % 8, mm)
-        mm.sync()
-        col.update_dist()
-
-    us = _t(do_moves, n=3)
-    bytes_per_sync = 8 * 2000 * width * 8
-    row("reloc_host_16k_entries", us,
-        f"GBps={bytes_per_sync / us / 1e3:.2f}")
-
-    # SPMD half: jit cost of the capacity pack (the compute half of the
-    # device-side Alltoallv); collective timing needs real links
-    import jax
-    import jax.numpy as jnp
-    from repro.core.relocation import _pack_by_dest
-    x = jnp.asarray(rows[:16384].astype(np.float32))
-    dest = jnp.asarray(np.random.default_rng(1).integers(0, 64, 16384),
-                       dtype=jnp.int32)
-    pack = jax.jit(lambda x, d: _pack_by_dest(x, d, 64, 512)[0])
-    pack(x, dest).block_until_ready()
-    us = _t(lambda: pack(x, dest).block_until_ready(), n=5)
-    row("reloc_spmd_pack_16k", us,
-        f"GBps={16384 * width * 4 / us / 1e3:.2f}")
+            assert sorted(s1.keys(p)) == sorted(s2.keys(p)) \
+                and sorted(k1.keys(p)) == sorted(k2.keys(p)), \
+                f"depth-2 final state diverged at replica {p}"
+        assert s2.global_size() == keys and k2.global_size() == keys
+        speedup = t1 / max(t2, 1e-9)
+        # smoke is the CI wiring check and tolerates timer noise on a
+        # tiny scenario; the full row asserts the real win
+        assert speedup >= (0.9 if smoke else 1.05), \
+            f"depth=2 ({t2 * 1e3:.0f}ms) not faster than depth=1 " \
+            f"({t1 * 1e3:.0f}ms)"
+        row("reloc_pipeline_depth2", t2 * 1e6 / windows,
+            f"depth1_us={t1 * 1e6 / windows:.0f};speedup_x={speedup:.2f};"
+            f"windows={windows};keys={keys};parity=1")
 
 
 def bench_kernels():
@@ -410,10 +536,11 @@ GROUPS = {
     "kmeans": lambda sels, smoke: bench_kmeans(),
     "moldyn": lambda sels, smoke: bench_moldyn(),
     "plham": lambda sels, smoke: bench_plham(),
-    "glb": lambda sels, smoke: bench_glb(only=sels or None),
+    "glb": lambda sels, smoke: bench_glb(only=sels or None, smoke=smoke),
     "serving": lambda sels, smoke: bench_serving(only=sels or None,
                                                  smoke=smoke),
-    "reloc": lambda sels, smoke: bench_relocation(),
+    "reloc": lambda sels, smoke: bench_relocation(only=sels or None,
+                                                  smoke=smoke),
     "kernel": lambda sels, smoke: bench_kernels(),
     "train": lambda sels, smoke: bench_train_smoke(),
     "roofline": lambda sels, smoke: roofline_table(),

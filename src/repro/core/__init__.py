@@ -38,6 +38,13 @@ from .relocation import (
     spmd_relocate,
     spmd_relocate_back,
 )
+from .spmd_glb import (
+    run_device_steal,
+    spmd_steal_loop,
+    spmd_steal_plan,
+    spmd_steal_step,
+    steal_candidates,
+)
 from .teamed import (
     Reducer,
     allgather1,
@@ -60,6 +67,8 @@ __all__ = [
     "RangedListProduct", "Tile",
     "AsyncRelocation", "CollectiveMoveManager", "spmd_counts",
     "spmd_relocate", "spmd_relocate_back",
+    "run_device_steal", "spmd_steal_loop", "spmd_steal_plan",
+    "spmd_steal_step", "steal_candidates",
     "Reducer", "allgather1", "local_reduce", "spmd_allgather1",
     "spmd_team_reduce", "team_reduce",
 ]

@@ -113,12 +113,22 @@ class _CommStats:
 
 
 class DistCollection:
-    """Base: global id, place group, lazily-allocated local handles."""
+    """Base: global id, place group, lazily-allocated local handles.
+
+    ``_lock`` serializes structural mutation of the handles across the
+    relocation engine's background threads: with double-buffered windows
+    (``sync_async(depth=2)``) window N's *delivery* runs concurrently
+    with window N+1's *extraction* — both against the same handles — and
+    with main-thread inserts (serving admission).  Pure reads stay
+    lock-free, as before: they tolerate concurrent pops/inserts by
+    snapshotting (``list(h)``) and ``get``-ing.
+    """
 
     def __init__(self, group: PlaceGroup):
         self.group = group
         self.global_id = _fresh_global_id()
         self._handles: dict[int, Any] = {}
+        self._lock = threading.RLock()
         self.comm = _CommStats()
 
     # -- lazy allocation (paper §5.1) ---------------------------------
@@ -222,9 +232,10 @@ class DistArray(DistCollection):
 
     # -- local access ---------------------------------------------------
     def add_chunk(self, place: int, r: LongRange, rows) -> None:
-        self.handle(place).add_chunk(r, np.asarray(rows))
-        if self.track:
-            self._dist.assign(r, place)
+        with self._lock:
+            self.handle(place).add_chunk(r, np.asarray(rows))
+            if self.track:
+                self._dist.assign(r, place)
 
     def get(self, place: int, idx: int):
         return self.handle(place).get(idx)
@@ -317,32 +328,36 @@ class DistArray(DistCollection):
     def get_distribution(self) -> RangeDistribution:
         if not self.track:
             raise ValueError("distribution tracking disabled for this collection")
-        return self._dist.copy()
+        with self._lock:
+            return self._dist.copy()
 
     def update_dist(self) -> None:
         """Teamed reconciliation. Host model: rebuild from handles while
         accounting the delta bytes that the wire protocol would move
-        (only changes since each place's last sync — paper §4.6)."""
+        (only changes since each place's last sync — paper §4.6).  May
+        run on a double-buffered window's delivery thread, so the whole
+        rebuild-and-swap holds the collection lock."""
         if not self.track:
             raise ValueError("distribution tracking disabled")
-        old = self._dist
-        new = RangeDistribution()
-        for p in self.group.members:
-            for r in self.ranges(p):
-                new.assign(r, p)
-        # Delta accounting: ranges whose ownership changed since `old`.
-        changed = 0
-        for r, o in new.items():
-            try:
-                prev_owner = old.owner_of(r.start)
-            except KeyError:
-                prev_owner = -2
-            if prev_owner != o:
-                changed += 1
-        self.update_bytes += 8 * 3 * changed * self.group.size()
-        self.comm.record(8 * 3 * changed * self.group.size(),
-                         messages=self.group.size())
-        self._dist = new
+        with self._lock:
+            old = self._dist
+            new = RangeDistribution()
+            for p in self.group.members:
+                for r in self.ranges(p):
+                    new.assign(r, p)
+            # Delta accounting: ranges whose ownership changed since `old`.
+            changed = 0
+            for r, o in new.items():
+                try:
+                    prev_owner = old.owner_of(r.start)
+                except KeyError:
+                    prev_owner = -2
+                if prev_owner != o:
+                    changed += 1
+            self.update_bytes += 8 * 3 * changed * self.group.size()
+            self.comm.record(8 * 3 * changed * self.group.size(),
+                             messages=self.group.size())
+            self._dist = new
 
     # -- relocation execution hooks (called by CollectiveMoveManager) ----
     def _extract_range(self, r: LongRange, src: int) -> np.ndarray:
@@ -560,18 +575,23 @@ class DistIdMap(DistMap):
         self._dist = RangeDistribution()
 
     def put(self, place: int, key: int, value) -> None:
-        super().put(place, int(key), value)
-        self._dist.assign(LongRange(int(key), int(key) + 1), place)
+        # the dist assign must not interleave with a background window's
+        # update_dist rebuild (serving admits while window N delivers)
+        with self._lock:
+            super().put(place, int(key), value)
+            self._dist.assign(LongRange(int(key), int(key) + 1), place)
 
     def get_distribution(self) -> RangeDistribution:
-        return self._dist.copy()
+        with self._lock:
+            return self._dist.copy()
 
     def update_dist(self) -> None:
-        new = RangeDistribution()
-        for p in self.group.members:
-            for k in self.keys(p):
-                new.assign(LongRange(k, k + 1), p)
-        self._dist = new
+        with self._lock:
+            new = RangeDistribution()
+            for p in self.group.members:
+                for k in self.keys(p):
+                    new.assign(LongRange(k, k + 1), p)
+            self._dist = new
 
 
 def DistMultiMap(group: PlaceGroup) -> DistMap:

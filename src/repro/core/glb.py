@@ -22,6 +22,18 @@ hand.  This module turns it into a library feature:
 * **SPMD mirror** — :func:`spmd_rebalance` applies a
   :class:`BalanceDecision` *inside* jit/shard_map as a capacity-masked
   ``lax.all_to_all`` shuffle, reusing :func:`spmd_relocate`.
+* **Jit-resident steal loop** — ``device_loop=True`` makes
+  :meth:`GlobalLoadBalancer.steal_loop` run all steal rounds in one
+  jitted SPMD call (``core/spmd_glb.py``): psum'd outstanding-work
+  counters, lifeline-masked victim selection, masked ``all_to_all``
+  hand-off, device-side termination — zero host round-trips, with the
+  tracked distribution reconciled once at the end and final loads
+  matching the host ``steal_pass`` policy exactly.
+* **Double-buffered windows** — ``GLBConfig(pipeline_depth=2)`` holds
+  two in-flight ``sync_async`` windows: window N's delivery (and
+  distribution reconciliation) runs on a background thread while window
+  N+1 packs and the caller computes; stats account each window
+  individually as it commits.
 * **Failure awareness** — :meth:`GlobalLoadBalancer.evict_place`
   removes a dead member: the lifeline graph is rebuilt over the
   survivors, and planning/stealing mask the dead member out so no move
@@ -60,6 +72,7 @@ __all__ = [
     "MultiCollectionWorkload",
     "ring_lifelines",
     "hypercube_lifelines",
+    "lifeline_bfs",
     "moves_to_matrix",
     "spmd_rebalance",
     "ClusterSim",
@@ -102,6 +115,30 @@ _LIFELINES: dict[str, Callable[[int], dict[int, tuple[int, ...]]]] = {
 }
 
 
+def lifeline_bfs(lifelines: dict[int, tuple[int, ...]],
+                 start: int) -> list[tuple[int, int]]:
+    """Victim candidates of a thief at ``start``, as (victim, hops) in
+    breadth-first order over the lifeline graph (hop-1 neighbors first,
+    in adjacency order).  The single source of the steal candidate
+    order: the host :meth:`GlobalLoadBalancer.steal` walks it directly,
+    and the device loop bakes it into static tables
+    (:func:`repro.core.spmd_glb.steal_candidates`) — host/device parity
+    depends on both consuming this one definition."""
+    seen, frontier, hops = {start}, [start], 0
+    out: list[tuple[int, int]] = []
+    while frontier:
+        hops += 1
+        nxt = []
+        for u in frontier:
+            for v in lifelines.get(u, ()):
+                if v not in seen:
+                    seen.add(v)
+                    nxt.append(v)
+                    out.append((v, hops))
+        frontier = nxt
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Work sources
 # ---------------------------------------------------------------------------
@@ -113,9 +150,12 @@ class Workload(Protocol):
         ...
 
     def transfer(self, moves: Sequence[tuple[int, int, int]], *,
-                 asynchronous: bool = False) -> AsyncRelocation | None:
+                 asynchronous: bool = False,
+                 after: AsyncRelocation | None = None
+                 ) -> AsyncRelocation | None:
         """Execute (src_member, dest_member, count) moves; async mode
-        returns an :class:`AsyncRelocation` to finish later."""
+        returns an :class:`AsyncRelocation` to finish later.  ``after``
+        chains the window behind a predecessor (pipeline_depth >= 2)."""
         ...
 
 
@@ -136,7 +176,7 @@ class DistArrayWorkload:
         return np.asarray([self.col.local_size(p) for p in self.members],
                           np.int64)
 
-    def transfer(self, moves, *, asynchronous: bool = False):
+    def transfer(self, moves, *, asynchronous: bool = False, after=None):
         mm = CollectiveMoveManager(self.col.group)
         moved = 0
         for src_i, dest_i, count in moves:
@@ -150,7 +190,7 @@ class DistArrayWorkload:
         if not mm.pending():
             return None
         update = (self.col,) if self.col.track else ()
-        handle = mm.sync_async(update_dists=update)
+        handle = mm.sync_async(update_dists=update, after=after)
         if not asynchronous:
             handle.finish()
         return handle
@@ -180,7 +220,7 @@ class MultiCollectionWorkload(DistArrayWorkload):
             all(comp.ranges(p) == self.col.ranges(p) for p in self.members)
             for comp in self.companions)
 
-    def transfer(self, moves, *, asynchronous: bool = False):
+    def transfer(self, moves, *, asynchronous: bool = False, after=None):
         # count moves resolve lazily from each collection's own chunks —
         # a drifted companion would silently ship different entries, so
         # check the invariant once per window (registration below does
@@ -204,7 +244,7 @@ class MultiCollectionWorkload(DistArrayWorkload):
         if not mm.pending():
             return None
         update = tuple(c for c in (self.col, *self.companions) if c.track)
-        handle = mm.sync_async(update_dists=update)
+        handle = mm.sync_async(update_dists=update, after=after)
         if not asynchronous:
             handle.finish()
         return handle
@@ -227,8 +267,8 @@ class ListWorkload:
         return np.asarray([sum(self.weight(it) for it in lst)
                            for lst in self.lists], np.int64)
 
-    def transfer(self, moves, *, asynchronous: bool = False):
-        del asynchronous  # host lists: transfer is immediate
+    def transfer(self, moves, *, asynchronous: bool = False, after=None):
+        del asynchronous, after  # host lists: transfer is immediate
         total = 0
         for src_i, dest_i, count in moves:
             src = self.lists[src_i]
@@ -251,6 +291,9 @@ class GLBConfig:
     policy: Any = "level_extremes"  # name or plan(times, loads) object
     ema: float = 0.0             # smooth timings across windows
     asynchronous: bool = True    # overlap relocation with caller compute
+    pipeline_depth: int = 1      # in-flight migration windows (2 = double
+    #                              buffer: window N delivers in the
+    #                              background while N+1 packs)
     lifeline: str = "hypercube"  # "ring" | "hypercube"
     random_steal_attempts: int = 2
     steal_ratio: float = 0.5     # fraction of victim surplus per steal
@@ -308,12 +351,18 @@ class GlobalLoadBalancer:
 
     def __init__(self, group: PlaceGroup | int, workload: Workload,
                  config: GLBConfig | None = None, *,
-                 on_finish: Callable[[AsyncRelocation], None] | None = None):
+                 on_finish: Callable[[AsyncRelocation], None] | None = None,
+                 device_loop: bool = False,
+                 device_capacity: int | None = None):
         if isinstance(group, int):
             group = PlaceGroup(group)
         self.group = group
         self.workload = workload
         self.cfg = config or GLBConfig()
+        # device_loop: steal_loop() runs the jit-resident SPMD steal
+        # (core/spmd_glb.py) instead of the host steal_pass loop
+        self.device_loop = device_loop
+        self.device_capacity = device_capacity
         # fires after a migration window's delivery + distribution
         # reconciliation — the hook consumers (e.g. the serving Router's
         # dispatch table) use to refresh exactly once per window
@@ -333,7 +382,9 @@ class GlobalLoadBalancer:
         self.iter = 0
         self._acc = np.zeros(self.n, np.float64)
         self._smoothed: np.ndarray | None = None
-        self._pending: AsyncRelocation | None = None
+        # FIFO of in-flight migration windows; cfg.pipeline_depth bounds
+        # its length (1 = the classic single pending window)
+        self._pending: list[AsyncRelocation] = []
         self._terminated = False
         self.last_trace: dict[str, float] | None = None
 
@@ -374,11 +425,33 @@ class GlobalLoadBalancer:
     def step(self) -> BalanceDecision | None:
         """Advance one iteration; every ``period`` iterations exchange
         times, plan, and launch the relocation.  Returns the decision on
-        trigger iterations (possibly with zero moves), else None."""
-        self.finish()
+        trigger iterations (possibly with zero moves), else None.
+
+        With ``cfg.pipeline_depth == 1`` the previous window is finished
+        here — the classic reconciling barrier.  With ``depth >= 2`` the
+        pipeline only drains down to ``depth - 1`` windows (committing
+        the oldest, whose delivery already ran in the background), and
+        planning waits on the newest window's *counts* only — so window
+        N's delivery overlaps the caller's compute and window N+1's
+        packing."""
+        depth = max(1, int(self.cfg.pipeline_depth))
+        if depth <= 1:
+            self.finish()
+        else:
+            while len(self._pending) >= depth:
+                self._finish_oldest()
         self.iter += 1
         if self.iter % self.cfg.period != 0:
             return None
+        if self._pending:
+            # the newest in-flight window must *deliver* before loads
+            # are read: extracted-but-undelivered entries are visible at
+            # neither source nor destination, so the policy would see a
+            # phantom deficit and over-ship into the in-flight target.
+            # Delivery has been running in the background since launch,
+            # so by the next trigger this wait is normally instant; only
+            # the cheap accounting commit stays deferred.
+            self._pending[-1].wait_delivered()
         times = allgather1(self.group, self._acc)   # teamed cost exchange
         if self.cfg.ema > 0:
             if self._smoothed is None:
@@ -401,8 +474,19 @@ class GlobalLoadBalancer:
         self.history.append(decision)
         if decision.moves:
             self.stats.rebalances += 1
-            self._pending = self.workload.transfer(
-                decision.moves, asynchronous=self.cfg.asynchronous)
+            kw = {}
+            if depth > 1 and self._pending:
+                # chain the new window behind the newest in-flight one:
+                # extraction and delivery stay FIFO across windows
+                kw["after"] = self._pending[-1]
+            handle = self.workload.transfer(
+                decision.moves, asynchronous=self.cfg.asynchronous, **kw)
+            if handle is not None:
+                self._pending.append(handle)
+                if depth > 1:
+                    # double buffer: delivery starts as soon as phase 1
+                    # completes, overlapping the caller's next compute
+                    handle.enqueue()
             # account what actually moved after min_keep/availability
             # clamping, not the policy's planned total
             self.stats.entries_rebalanced += getattr(
@@ -410,21 +494,22 @@ class GlobalLoadBalancer:
         return decision
 
     def has_pending(self) -> bool:
-        """True while a launched migration window has not been finished
+        """True while a launched migration window has not been committed
         (its delivery barrier — and the ``on_finish`` hook — are still
         ahead)."""
-        return self._pending is not None
+        return bool(self._pending)
 
-    def finish(self) -> None:
-        """Barrier for the in-flight relocation (no-op when idle).
+    def _finish_oldest(self) -> None:
+        """Commit the oldest in-flight window, accounting its stats
+        per window (overlap, bytes, trace) — with ``pipeline_depth >= 2``
+        several handles are in flight at once and each one is accounted
+        individually as it commits.
 
         The handle is detached *before* the barrier: if phase 1 raised on
         the background thread the exception propagates here, but the
-        balancer is left consistent (no sync counted, nothing pending) so
-        the caller can keep stepping after handling it."""
-        pending, self._pending = self._pending, None
-        if pending is None:
-            return
+        balancer is left consistent (no sync counted for the failed
+        window) so the caller can keep stepping after handling it."""
+        pending = self._pending.pop(0)
         pending.finish()
         self.stats.syncs_total += 1
         self.stats.bytes_moved += pending.manager.last_payload_bytes
@@ -433,6 +518,12 @@ class GlobalLoadBalancer:
         self.last_trace = dict(pending.trace)
         if self.on_finish is not None:
             self.on_finish(pending)
+
+    def finish(self) -> None:
+        """Barrier for every in-flight migration window (no-op when
+        idle): commits the whole pipeline, FIFO."""
+        while self._pending:
+            self._finish_oldest()
 
     # -- lifeline stealing ------------------------------------------------
     def _serve(self, victim: int, thief: int) -> int:
@@ -462,18 +553,9 @@ class GlobalLoadBalancer:
                 others, size=min(self.cfg.random_steal_attempts, len(others)),
                 replace=False)
             candidates += [(int(v), 1) for v in picks]
-        # lifeline BFS (termination-safe: bounded by graph size)
-        seen, frontier, hops = {thief}, [thief], 0
-        while frontier:
-            hops += 1
-            nxt = []
-            for u in frontier:
-                for v in self.lifelines.get(u, ()):
-                    if v not in seen:
-                        seen.add(v)
-                        nxt.append(v)
-                        candidates.append((v, hops))
-            frontier = nxt
+        # lifeline BFS (termination-safe: bounded by graph size); shared
+        # with the device loop's static candidate tables
+        candidates += lifeline_bfs(self.lifelines, thief)
         for victim, nhops in candidates:
             if loads[victim] <= self.cfg.min_keep:
                 continue
@@ -514,6 +596,66 @@ class GlobalLoadBalancer:
     def is_terminated(self) -> bool:
         return self._terminated
 
+    def steal_loop(self, max_rounds: int = 12) -> dict:
+        """Run steal rounds until a whole round acquires nothing (or
+        ``max_rounds``).  Host mode: a Python loop of
+        :meth:`steal_pass`, one host round-trip per round.  With
+        ``device_loop=True`` (constructor): the *jit-resident* SPMD
+        steal loop (``core/spmd_glb.py``) — psum'd outstanding-work
+        counters, lifeline-masked victim selection, masked
+        ``all_to_all`` hand-off — runs all rounds in one jitted call
+        with zero host round-trips, then reconciles the tracked
+        distribution once at the end.  The device loop implements the
+        host ``steal_pass`` policy exactly (it requires
+        ``random_steal_attempts == 0`` — the deterministic lifeline-only
+        policy), so the final per-place load vector, round count, and
+        steal stats match the host path exactly; which specific entries
+        land where may differ (count moves let the library pick the
+        entries on both paths).  Returns ``{"rounds", "stolen",
+        "device"}``."""
+        self.finish()
+        if not self.device_loop:
+            rounds = stolen = 0
+            while rounds < max_rounds:
+                moved = self.steal_pass()
+                rounds += 1
+                stolen += moved
+                if moved == 0:
+                    break
+            return {"rounds": rounds, "stolen": stolen, "device": False}
+        if self.cfg.random_steal_attempts != 0:
+            raise ValueError(
+                "device_loop runs the deterministic lifeline-only steal "
+                "policy; configure GLBConfig(random_steal_attempts=0)")
+        if type(self.workload) is not DistArrayWorkload:
+            raise TypeError(
+                "device_loop currently balances a DistArrayWorkload "
+                f"(got {type(self.workload).__name__})")
+        if self.workload.min_keep != self.cfg.min_keep:
+            raise ValueError(
+                "device_loop needs one victim floor: workload.min_keep "
+                f"({self.workload.min_keep}) != cfg.min_keep "
+                f"({self.cfg.min_keep})")
+        from .spmd_glb import run_device_steal
+        t0 = time.perf_counter()
+        res = run_device_steal(
+            self.workload.col, self.lifelines, self._alive,
+            steal_ratio=self.cfg.steal_ratio, min_keep=self.cfg.min_keep,
+            idle_threshold=self.cfg.idle_threshold, max_rounds=max_rounds,
+            capacity=self.device_capacity)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        st = self.stats
+        st.steals_attempted += res["attempted"]
+        st.steals_served += res["served"]
+        st.entries_stolen += res["stolen"]
+        st.steal_hops += res["hops"]
+        st.steal_latency_us += dt_us
+        st.bytes_moved += res["bytes_moved"]
+        if res["terminated"]:
+            self._terminated = True
+        return {"rounds": res["rounds"], "stolen": res["stolen"],
+                "device": True}
+
 
 # ---------------------------------------------------------------------------
 # SPMD mirror — apply a BalanceDecision inside jit/shard_map
@@ -526,7 +668,8 @@ def moves_to_matrix(decision: BalanceDecision, n: int) -> np.ndarray:
     return m
 
 
-def spmd_rebalance(x, valid, move_matrix, *, axis_name: str, capacity: int):
+def spmd_rebalance(x, valid, move_matrix, *, axis_name: str, capacity: int,
+                   extras: tuple = ()):
     """Device-side GLB: shuffle rows between shards per ``move_matrix``.
 
     Each shard reads its row of the (n, n) move matrix, assigns its
@@ -535,7 +678,9 @@ def spmd_rebalance(x, valid, move_matrix, *, axis_name: str, capacity: int):
     ``lax.all_to_all`` via :func:`spmd_relocate`.  The input validity
     mask rides along as an extra so padding rows never materialize as
     real entries.  Returns ``(new_rows, new_valid)`` with shapes
-    ``(n_shards*capacity, ...)`` / ``(n_shards*capacity,)``.
+    ``(n_shards*capacity, ...)`` / ``(n_shards*capacity,)``; with
+    ``extras`` (per-row arrays relocated under the same routing, e.g.
+    global entry ids) it returns ``(new_rows, new_valid, new_extras)``.
     """
     import jax
     import jax.numpy as jnp
@@ -558,9 +703,11 @@ def spmd_rebalance(x, valid, move_matrix, *, axis_name: str, capacity: int):
     dest = jnp.where(outgoing, jnp.minimum(planned, n - 1),
                      jnp.where(validb, me, n))
     out = spmd_relocate(x, dest, axis_name=axis_name, capacity=capacity,
-                        extras=(validb.astype(jnp.int32),))
+                        extras=(validb.astype(jnp.int32),) + tuple(extras))
     new_valid = out["recv_valid"] & (out["recv_extras"][0] > 0)
-    return out["recv"], new_valid
+    if not extras:
+        return out["recv"], new_valid
+    return out["recv"], new_valid, tuple(out["recv_extras"][1:])
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,12 @@ Two halves, mirroring the paper's design:
   place calls :meth:`CollectiveMoveManager.sync`.  The wire protocol is
   the paper's §5.3 two-phase exchange — Alltoall on byte counts, then
   Alltoallv on payload — which we account explicitly so benchmarks can
-  report the communication volume.
+  report the communication volume.  ``sync_async(depth=2)`` double
+  buffers the exchange: phase 2 is split into background *delivery*
+  (:meth:`AsyncRelocation.enqueue`) and a cheap *commit*
+  (:meth:`AsyncRelocation.finish`), so window N delivers while window
+  N+1 runs its counts+packing — windows are chained so extraction and
+  delivery stay FIFO-deterministic over the same collections.
 
 * **SPMD half** — :func:`spmd_relocate` / :func:`spmd_relocate_back`:
   the same operation *inside* a jitted/shard_mapped program.  TPU
@@ -92,6 +97,7 @@ class CollectiveMoveManager:
         self._bag_moves: list[_BagMove] = []
         self._key_moves: list[_KeyMove] = []
         self._array_count_moves: list[_ArrayCountMove] = []
+        self._inflight: list["AsyncRelocation"] = []
         self.last_counts_matrix: np.ndarray | None = None
         self.last_payload_bytes = 0
         self.syncs = 0
@@ -170,7 +176,8 @@ class CollectiveMoveManager:
         """
         self.sync_async().finish()
 
-    def sync_async(self, update_dists: tuple = ()) -> "AsyncRelocation":
+    def sync_async(self, update_dists: tuple = (), *, depth: int = 1,
+                   after: "AsyncRelocation | None" = None) -> "AsyncRelocation":
         """Split the §5.3 two-phase exchange so phase 1 — the counts
         Alltoall plus payload extraction/packing — runs on a background
         thread while the caller keeps computing (the paper's 'relocation
@@ -181,14 +188,47 @@ class CollectiveMoveManager:
         :meth:`AsyncRelocation.finish` to run phase 2 (delivery) and, if
         ``update_dists`` collections were given, reconcile their
         distributions via ``update_dist``.
+
+        ``depth`` bounds the number of in-flight windows on this manager
+        (double buffering): with ``depth=2`` the *previous* window's
+        phase-2 delivery is enqueued on a background thread — so window
+        N delivers while window N+1 runs phase-1 counts+packing — and
+        only the window before that is committed (the cheap barrier).
+        Windows are chained: a window's extraction never starts before
+        its predecessor's extraction completed, and deliveries commit in
+        FIFO order, so two live windows over the same collections stay
+        deterministic.  ``after`` chains this window behind a window of
+        *another* manager (the GLB pipelines its per-window managers
+        this way); in-manager predecessors are chained automatically.
         """
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
         moves = (tuple(self._range_moves), tuple(self._array_count_moves),
                  tuple(self._bag_moves), tuple(self._key_moves))
         self._range_moves = []
         self._array_count_moves = []
         self._bag_moves = []
         self._key_moves = []
-        return AsyncRelocation(self, moves, tuple(update_dists))
+        self._inflight = [h for h in self._inflight if not h.finished]
+        prev = after if after is not None else (
+            self._inflight[-1] if self._inflight else None)
+        handle = AsyncRelocation(self, moves, tuple(update_dists),
+                                 after=prev)
+        self._inflight.append(handle)
+        if prev is not None and not prev.finished:
+            # start the predecessor's delivery: it overlaps this
+            # window's phase 1 (and the caller's compute)
+            prev.enqueue()
+        while len([h for h in self._inflight if not h.finished]) > depth:
+            # detach before the barrier (like GLB.finish): an error in the
+            # oldest window propagates here without wedging the pipeline
+            self._inflight.pop(0).finish()
+        return handle
+
+    def drain(self) -> None:
+        """Commit every in-flight window of this manager, FIFO."""
+        while self._inflight:
+            self._inflight.pop(0).finish()
 
     def _phase1(self, moves) -> tuple[np.ndarray, list]:
         """Counts Alltoall + payload packing (runs off-thread under
@@ -198,7 +238,7 @@ class CollectiveMoveManager:
 
         The counts matrix only records bytes that cross places: a move
         whose destination equals its source never reaches the wire, and
-        ``_deliver`` excludes it from ``last_payload_bytes`` — keeping
+        ``_deliver_payloads`` excludes it from ``last_payload_bytes`` — keeping
         the diagonal zero is what makes the two §5.3 accounting surfaces
         agree (``last_counts_matrix.sum() == last_payload_bytes``)."""
         range_moves, array_count_moves, bag_moves, key_moves = moves
@@ -209,15 +249,18 @@ class CollectiveMoveManager:
 
         # Range moves: find the current holder, extract (splitting chunks).
         for m in range_moves:
-            src = None
-            for p in self.group.members:
-                held = any(cr.overlaps(m.r) for cr in m.collection.ranges(p))
-                if held:
-                    src = p
-                    break
-            if src is None:
-                raise KeyError(f"range {m.r} not held by any place in group")
-            rows = m.collection._extract_range(m.r, src)
+            with m.collection._lock:
+                src = None
+                for p in self.group.members:
+                    held = any(cr.overlaps(m.r)
+                               for cr in m.collection.ranges(p))
+                    if held:
+                        src = p
+                        break
+                if src is None:
+                    raise KeyError(
+                        f"range {m.r} not held by any place in group")
+                rows = m.collection._extract_range(m.r, src)
             payload = (m.r, rows)
             if src != m.dest:
                 nb = m.collection._payload_nbytes(payload)
@@ -226,24 +269,26 @@ class CollectiveMoveManager:
 
         for m in array_count_moves:
             remaining = m.count
-            for r in list(m.collection.ranges(m.src)):
-                if remaining <= 0:
-                    break
-                take = min(remaining, r.size)
-                rr = LongRange(r.start, r.start + take)
-                rows = m.collection._extract_range(rr, m.src)
-                payload = (rr, rows)
-                if m.src != m.dest:
-                    nb = m.collection._payload_nbytes(payload)
-                    counts[place_index[m.src], place_index[m.dest]] += nb
-                payloads.append((m.collection, m.src, m.dest, payload))
-                remaining -= take
+            with m.collection._lock:
+                for r in list(m.collection.ranges(m.src)):
+                    if remaining <= 0:
+                        break
+                    take = min(remaining, r.size)
+                    rr = LongRange(r.start, r.start + take)
+                    rows = m.collection._extract_range(rr, m.src)
+                    payload = (rr, rows)
+                    if m.src != m.dest:
+                        nb = m.collection._payload_nbytes(payload)
+                        counts[place_index[m.src], place_index[m.dest]] += nb
+                    payloads.append((m.collection, m.src, m.dest, payload))
+                    remaining -= take
             if remaining > 0:
                 raise ValueError(
                     f"place {m.src} holds fewer than {m.count} entries")
 
         for m in bag_moves:
-            payload = m.collection._extract_count(m.src, m.count)
+            with m.collection._lock:
+                payload = m.collection._extract_count(m.src, m.count)
             if m.src != m.dest:
                 nb = m.collection._payload_nbytes(payload)
                 counts[place_index[m.src], place_index[m.dest]] += nb
@@ -258,48 +303,74 @@ class CollectiveMoveManager:
                 if d != m.src:
                     by_dest.setdefault(d, []).append(k)
             for d, keys in by_dest.items():
-                payload = m.collection._extract_keys(m.src, keys)
+                with m.collection._lock:
+                    payload = m.collection._extract_keys(m.src, keys)
                 nb = m.collection._payload_nbytes(payload)
                 counts[place_index[m.src], place_index[d]] += nb
                 payloads.append((m.collection, m.src, d, payload))
 
         return counts, payloads
 
-    def _deliver(self, counts: np.ndarray, payloads: list) -> int:
-        """Phase 2: deliver. (Host model: direct insertion; on device the
-        equivalent is spmd_relocate below.)"""
+    def _deliver_payloads(self, payloads: list) -> int:
+        """Phase 2a: insert payloads at their destinations (may run on a
+        window's background delivery thread — insertion takes each
+        collection's lock so it never races a successor window's
+        extraction).  Returns the off-place payload bytes."""
         moved_bytes = 0
         for col, src, dest, payload in payloads:
             if src != dest:
                 moved_bytes += col._payload_nbytes(payload)
-            col._insert_payload(dest, payload)
+            with col._lock:
+                col._insert_payload(dest, payload)
             col.comm.record(col._payload_nbytes(payload) if src != dest else 0)
+        return moved_bytes
 
+    def _commit(self, counts: np.ndarray, moved_bytes: int) -> None:
+        """Phase 2b: publish the window's accounting (FIFO with respect
+        to delivery — runs at the commit barrier on the caller thread)."""
         self.last_counts_matrix = counts
         self.last_payload_bytes = moved_bytes
         self.syncs += 1
-        return moved_bytes
+
 
 
 class AsyncRelocation:
     """An in-flight teamed relocation started by
     :meth:`CollectiveMoveManager.sync_async`.
 
-    Phase 1 (counts Alltoall + payload packing) runs on a daemon thread;
-    :meth:`finish` is the teamed barrier that joins it, delivers the
-    payloads (phase 2) and reconciles tracked distributions.  ``trace``
-    holds host-side timestamps so benchmarks can verify that phase 1
-    overlapped the caller's compute (``t_counts_ready < t_finish_enter``).
+    Phase 1 (counts Alltoall + payload packing) runs on a daemon thread.
+    Phase 2 is split in two so windows can double-buffer:
+
+    * :meth:`enqueue` starts *delivery* — payload insertion plus the
+      ``update_dists`` reconciliation — on a background thread (after
+      phase 1, and after the predecessor window's delivery when chained
+      via ``after=``);
+    * :meth:`finish` is the *commit* barrier: it joins delivery and
+      publishes the window's accounting on the manager.  When
+      :meth:`enqueue` was never called, :meth:`finish` runs both halves
+      — the original synchronous-barrier semantics.
+
+    ``trace`` holds host-side timestamps so benchmarks can verify the
+    overlap: ``t_counts_ready`` (phase 1 done), ``t_enqueue`` (delivery
+    requested), ``t_delivered`` (payloads landed + distributions
+    reconciled), ``t_finish_enter`` (commit barrier reached).
     """
 
     def __init__(self, manager: CollectiveMoveManager, moves,
-                 update_dists: tuple):
+                 update_dists: tuple, *,
+                 after: "AsyncRelocation | None" = None):
         self.manager = manager
         self._update_dists = update_dists
+        self._after = after
         self._counts: np.ndarray | None = None
         self._payloads: list | None = None
+        self._moved_bytes = 0
         self._exc: BaseException | None = None
         self._counts_ready = threading.Event()
+        self._delivered = threading.Event()
+        self._enqueue_lock = threading.Lock()
+        self._phase2_claimed = False
+        self._delivery_thread: threading.Thread | None = None
         self.finished = False
         self.trace: dict[str, float] = {"t_submit": time.perf_counter()}
         self._thread = threading.Thread(
@@ -308,6 +379,13 @@ class AsyncRelocation:
 
     def _run_phase1(self, moves) -> None:
         try:
+            # chained windows extract strictly after the predecessor
+            # *delivered*: key-rule moves enumerate the source's keys at
+            # extraction time, so entries still in the predecessor's
+            # flight must have landed first or the move would silently
+            # miss them (extraction ordering alone is not enough)
+            if self._after is not None:
+                self._after._delivered.wait()
             self._counts, self._payloads = self.manager._phase1(moves)
         except BaseException as e:  # re-raised at the finish() barrier
             self._exc = e
@@ -323,7 +401,9 @@ class AsyncRelocation:
     def wait_counts(self, timeout: float | None = None) -> np.ndarray | None:
         """Block until the place×place byte-count matrix is available —
         the phase-1 Alltoall result, usable for flow control before the
-        payload exchange lands."""
+        payload exchange lands.  Returns ``None`` when ``timeout``
+        expires first (the window stays in flight and a later
+        :meth:`wait_counts` or :meth:`finish` still succeeds)."""
         self._counts_ready.wait(timeout)
         if self._exc is not None:
             raise self._exc
@@ -331,24 +411,96 @@ class AsyncRelocation:
 
     @property
     def overlapped(self) -> bool:
-        """Did phase 1 complete before the caller reached the barrier?"""
-        return ("t_finish_enter" in self.trace
-                and self.trace["t_counts_ready"]
-                <= self.trace["t_finish_enter"])
+        """Did this window's relocation work overlap the caller's
+        compute?  For a plain barrier window: phase 1 completed before
+        the caller reached :meth:`finish`.  For a double-buffered window
+        (delivery enqueued before the commit barrier): delivery also
+        completed before the commit was requested — i.e. the commit was
+        free.  Accounted per window, so overlapping handles each report
+        their own overlap."""
+        t_fin = self.trace.get("t_finish_enter")
+        if t_fin is None or "t_counts_ready" not in self.trace:
+            return False
+        if self.trace.get("t_enqueue", t_fin) < t_fin \
+                and "t_delivered" in self.trace:
+            return self.trace["t_delivered"] <= t_fin
+        return self.trace["t_counts_ready"] <= t_fin
+
+    # -- phase 2a: delivery ------------------------------------------------
+    def enqueue(self) -> "AsyncRelocation":
+        """Start phase-2 delivery on a background thread (idempotent).
+        Delivery waits for this window's phase 1 and for the predecessor
+        window's delivery (FIFO), inserts the payloads, and reconciles
+        the ``update_dists`` distributions — all off the caller's
+        critical path.  :meth:`finish` remains the commit barrier."""
+        with self._enqueue_lock:
+            if self.finished or self._phase2_claimed:
+                return self
+            self._phase2_claimed = True
+            self.trace["t_enqueue"] = time.perf_counter()
+            self._delivery_thread = threading.Thread(
+                target=self._run_phase2, daemon=True)
+            self._delivery_thread.start()
+        return self
+
+    def _run_phase2(self) -> None:
+        """Delivery body, shared by the background thread and the
+        synchronous :meth:`finish` path (which runs it inline on the
+        caller thread — no thread spawn for plain barrier windows)."""
+        try:
+            self._thread.join()
+            if self._exc is not None:
+                return
+            if self._after is not None:
+                self._after._delivered.wait()
+            self._moved_bytes = self.manager._deliver_payloads(self._payloads)
+            for col in self._update_dists:
+                col.update_dist()
+        except BaseException as e:  # re-raised at the finish() barrier
+            self._exc = e
+        finally:
+            # the chain link is only needed for the ordering waits above;
+            # dropping it here keeps a long-running pipeline from pinning
+            # every predecessor handle (and its payload refs) forever
+            self._after = None
+            self.trace["t_delivered"] = time.perf_counter()
+            self._delivered.set()
+
+    def wait_delivered(self, timeout: float | None = None) -> bool:
+        """Block until this window's background delivery — payload
+        insertion plus distribution reconciliation — completed
+        (enqueueing it if needed).  Chained predecessors deliver first
+        (FIFO), so a True return means every window up to this one has
+        landed and ``loads``-style reads are fully consistent; only the
+        cheap accounting commit (:meth:`finish`) remains.  Returns False
+        when ``timeout`` expires first."""
+        self.enqueue()
+        done = self._delivered.wait(timeout)
+        if self._exc is not None:
+            raise self._exc
+        return done
 
     # -- the barrier -------------------------------------------------------
     def finish(self) -> "AsyncRelocation":
-        """Teamed barrier: join phase 1, deliver payloads, reconcile the
-        distributions of any ``update_dists`` collections."""
+        """Commit barrier: join phase 1 + delivery, publish the window's
+        accounting on the manager.  Synchronous path (no prior
+        :meth:`enqueue`): delivery runs inline on this thread — exactly
+        the original barrier semantics, with no thread spawn."""
         if self.finished:
             return self
         self.trace["t_finish_enter"] = time.perf_counter()
-        self._thread.join()
+        with self._enqueue_lock:
+            claimed = not self._phase2_claimed
+            if claimed:
+                self._phase2_claimed = True
+        if claimed:
+            self._run_phase2()
+        else:
+            self._delivered.wait()
         if self._exc is not None:
             raise self._exc
-        self.manager._deliver(self._counts, self._payloads)
-        for col in self._update_dists:
-            col.update_dist()
+        self.manager._commit(self._counts, self._moved_bytes)
+        self._payloads = None   # a chained successor must not pin them
         self.trace["t_done"] = time.perf_counter()
         self.finished = True
         return self

@@ -222,6 +222,9 @@ class RealDecodeSim:
     policy: str = "proportional"
     balance: bool = True
     heartbeat_timeout: int = 2
+    pipeline_depth: int = 1      # 2 = double-buffered migration windows:
+    #                              window N's KV delivery overlaps the
+    #                              decode rounds while window N+1 packs
     seed: int = 0
     engine: DecodeEngine | None = None
 
@@ -234,7 +237,8 @@ class RealDecodeSim:
         self.driver = ElasticServingDriver(
             self.n_replicas, slots_per_replica=self.slots,
             glb=GLBConfig(period=period, policy=self.policy, ema=0.3,
-                          asynchronous=True),
+                          asynchronous=True,
+                          pipeline_depth=self.pipeline_depth),
             heartbeat_timeout=self.heartbeat_timeout,
             engine=self.engine)
         if not self.work:

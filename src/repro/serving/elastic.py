@@ -234,7 +234,14 @@ class ElasticServingDriver:
         replica ``i``'s decode that many times — a slow chip whose extra
         compute really runs.  Returns the :meth:`step` info dict plus
         ``decode_s`` (measured seconds per member) and ``decoded``
-        (sequences advanced)."""
+        (sequences advanced).
+
+        With ``GLBConfig(pipeline_depth=2)`` migration windows double
+        buffer around the decode rounds: window N's KV delivery (and
+        distribution reconciliation) runs on a background thread while
+        this round decodes and window N+1 packs — the decode loop skips
+        in-flight pairs exactly as it does for extraction, and the
+        Router refresh still fires once per window at commit."""
         if self.engine is None:
             raise ValueError("decode_round needs an engine "
                              "(ElasticServingDriver(..., engine=...))")
@@ -336,6 +343,7 @@ class ServingSim:
     heartbeat_timeout: int = 2
     page_tokens: int = 16
     admission: str = "traffic"
+    pipeline_depth: int = 1      # 2 = double-buffered migration windows
     seed: int = 0
 
     def __post_init__(self):
@@ -343,7 +351,8 @@ class ServingSim:
         self.driver = ElasticServingDriver(
             self.n_replicas, slots_per_replica=self.slots,
             glb=GLBConfig(period=period, policy=self.policy, ema=0.3,
-                          asynchronous=True),
+                          asynchronous=True,
+                          pipeline_depth=self.pipeline_depth),
             heartbeat_timeout=self.heartbeat_timeout,
             page_tokens=self.page_tokens, admission=self.admission)
         if not self.speeds:

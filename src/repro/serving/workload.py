@@ -126,7 +126,9 @@ class TrafficWorkload:
 
     # -- the transfer path ------------------------------------------------
     def transfer(self, moves: SequenceT[tuple[int, int, int]], *,
-                 asynchronous: bool = False) -> AsyncRelocation | None:
+                 asynchronous: bool = False,
+                 after: AsyncRelocation | None = None
+                 ) -> AsyncRelocation | None:
         group = self.seqs.group
         loads = self.loads().astype(np.float64)
         assign: dict[int, dict[int, int]] = {}   # src -> {sid: dest}
@@ -172,7 +174,7 @@ class TrafficWorkload:
         if not mm.pending():
             return None
         update = (self.seqs,) + ((self.kv,) if self.kv is not None else ())
-        handle = mm.sync_async(update_dists=update)
+        handle = mm.sync_async(update_dists=update, after=after)
         if not asynchronous:
             handle.finish()
         return handle

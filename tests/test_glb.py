@@ -186,10 +186,10 @@ class TestAsyncRelocation:
                                  GLBConfig(period=1, asynchronous=True))
         mm = CollectiveMoveManager(g)
         col.move_at_sync_count(0, 10_000, 1, mm)    # more than place 0 holds
-        glb._pending = mm.sync_async()
+        glb._pending.append(mm.sync_async())
         with pytest.raises(ValueError):
             glb.finish()
-        assert glb._pending is None                 # detached, not stuck
+        assert not glb._pending                     # detached, not stuck
         assert glb.stats.syncs_total == 0
         assert glb.stats.syncs_overlapped == 0
         # place 0 was emptied by the failed extraction; make place 1 the

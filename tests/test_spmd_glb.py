@@ -1,0 +1,367 @@
+"""Jit-resident steal loop (ISSUE 4): host-policy parity of the device
+loop, candidate-table fidelity, and the shard_map deployment path (slow
+tier).  The fast tier drives the SPMD body through ``jax.vmap`` — same
+program, one device."""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DistArray, DistArrayWorkload, GLBConfig, GlobalLoadBalancer, LongRange,
+    MultiCollectionWorkload, PlaceGroup, hypercube_lifelines, ring_lifelines,
+    steal_candidates,
+)
+
+
+def make_col(n_places, n, skew=0, width=2):
+    g = PlaceGroup(n_places)
+    col = DistArray(g, track=True)
+    col.add_chunk(skew, LongRange(0, n),
+                  np.arange(n, dtype=np.float64)[:, None]
+                  * np.ones((1, width)))
+    for p in g.members:
+        col.handle(p)
+    return g, col
+
+
+def entry_multiset(col):
+    vals = []
+    for p in col.group.members:
+        rows, _ = col.to_local_matrix(p)
+        if len(rows):
+            vals.extend(np.asarray(rows)[:, 0].tolist())
+    return sorted(vals)
+
+
+def det_cfg(topo="hypercube", **kw):
+    return GLBConfig(lifeline=topo, random_steal_attempts=0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# candidate tables mirror the host BFS
+# ---------------------------------------------------------------------------
+class TestCandidates:
+    def test_ring_candidates_follow_the_ring(self):
+        cand, hops = steal_candidates(ring_lifelines(5), 5)
+        assert cand[0].tolist() == [1, 2, 3, 4]
+        assert hops[0].tolist() == [1, 2, 3, 4]
+        assert cand[3].tolist() == [4, 0, 1, 2]
+
+    def test_hypercube_candidates_match_host_bfs(self):
+        lifelines = hypercube_lifelines(8)
+        cand, hops = steal_candidates(lifelines, 8)
+        for thief in range(8):
+            # reference: the host GlobalLoadBalancer.steal BFS
+            seen, frontier, h, expect = {thief}, [thief], 0, []
+            while frontier:
+                h += 1
+                nxt = []
+                for u in frontier:
+                    for v in lifelines.get(u, ()):
+                        if v not in seen:
+                            seen.add(v)
+                            nxt.append(v)
+                            expect.append((v, h))
+                frontier = nxt
+            got = [(int(c), int(d)) for c, d in zip(cand[thief], hops[thief])
+                   if c >= 0]
+            assert got == expect
+
+    def test_evicted_places_have_no_candidates(self):
+        base = hypercube_lifelines(4)
+        del base[2]
+        lifelines = {t: tuple(v for v in nbrs if v != 2)
+                     for t, nbrs in base.items()}
+        cand, _ = steal_candidates(lifelines, 4)
+        assert (cand[2] == -1).all()
+        assert all(2 not in cand[t] for t in (0, 1, 3))
+
+
+# ---------------------------------------------------------------------------
+# device loop == host steal_pass policy (the parity acceptance)
+# ---------------------------------------------------------------------------
+class TestDeviceHostParity:
+    @pytest.mark.parametrize("topo", ["ring", "hypercube"])
+    def test_hot_shard_parity(self, topo):
+        g_h, c_h = make_col(4, 240)
+        glb_h = GlobalLoadBalancer(g_h, DistArrayWorkload(c_h),
+                                   det_cfg(topo))
+        res_h = glb_h.steal_loop(max_rounds=12)
+        g_d, c_d = make_col(4, 240)
+        glb_d = GlobalLoadBalancer(g_d, DistArrayWorkload(c_d),
+                                   det_cfg(topo), device_loop=True)
+        res_d = glb_d.steal_loop(max_rounds=12)
+        assert res_d["device"] and not res_h["device"]
+        assert [c_d.local_size(p) for p in g_d.members] \
+            == [c_h.local_size(p) for p in g_h.members]
+        assert res_d["rounds"] == res_h["rounds"]
+        assert res_d["stolen"] == res_h["stolen"]
+        sd, sh = glb_d.stats, glb_h.stats
+        assert (sd.steals_attempted, sd.steals_served, sd.entries_stolen,
+                sd.steal_hops) == (sh.steals_attempted, sh.steals_served,
+                                   sh.entries_stolen, sh.steal_hops)
+        # conservation: the multiset of entries survives the device loop
+        assert entry_multiset(c_d) == sorted(float(i) for i in range(240))
+        assert c_d.get_distribution().total == 240
+
+    def test_parity_with_evicted_place(self):
+        g_h, c_h = make_col(4, 240)
+        g_d, c_d = make_col(4, 240)
+        glb_h = GlobalLoadBalancer(g_h, DistArrayWorkload(c_h), det_cfg())
+        glb_d = GlobalLoadBalancer(g_d, DistArrayWorkload(c_d), det_cfg(),
+                                   device_loop=True)
+        glb_h.evict_place(2)
+        glb_d.evict_place(2)
+        glb_h.steal_loop(max_rounds=12)
+        glb_d.steal_loop(max_rounds=12)
+        loads_d = [c_d.local_size(p) for p in g_d.members]
+        assert loads_d == [c_h.local_size(p) for p in g_h.members]
+        assert loads_d[2] == 0                      # dead place untouched
+        assert c_d.global_size() == 240
+
+    def test_parity_random_distributions_share_one_compile(self):
+        """Several random initial layouts at one (n, S) configuration:
+        parity holds for each, and the jit cache key stays the same so
+        the loop compiles once."""
+        from repro.core.spmd_glb import _LOOP_CACHE
+        rng = np.random.default_rng(7)
+        total = 240
+        before = len(_LOOP_CACHE)
+        for _ in range(3):
+            cut = np.sort(rng.choice(total + 1, size=3, replace=True))
+            sizes = np.diff(np.concatenate([[0], cut, [total]]))
+            cols = []
+            for _ in range(2):
+                g = PlaceGroup(4)
+                col = DistArray(g, track=True)
+                rows = np.arange(total, dtype=np.float64)[:, None] \
+                    * np.ones((1, 2))
+                off = 0
+                for p, s in enumerate(sizes):
+                    if s:
+                        col.add_chunk(p, LongRange(off, off + int(s)),
+                                      rows[off:off + int(s)])
+                    off += int(s)
+                for p in g.members:
+                    col.handle(p)
+                cols.append((g, col))
+            (g_h, c_h), (g_d, c_d) = cols
+            GlobalLoadBalancer(g_h, DistArrayWorkload(c_h),
+                               det_cfg()).steal_loop()
+            GlobalLoadBalancer(g_d, DistArrayWorkload(c_d), det_cfg(),
+                               device_loop=True).steal_loop()
+            assert [c_d.local_size(p) for p in g_d.members] \
+                == [c_h.local_size(p) for p in g_h.members]
+            assert entry_multiset(c_d) == entry_multiset(c_h)
+        assert len(_LOOP_CACHE) <= before + 1
+
+    def test_rows_round_trip_bit_exact(self):
+        """The device loop relocates entry ids; rows materialize from
+        the original host chunks, so float64 payloads survive bit-exact
+        (regression: a float32 device round-trip corrupted every row,
+        moved or not)."""
+        rng = np.random.default_rng(0)
+        g = PlaceGroup(4)
+        col = DistArray(g, track=True)
+        rows = rng.normal(size=(64, 3))          # float64, full mantissa
+        col.add_chunk(0, LongRange(0, 64), rows)
+        for p in g.members:
+            col.handle(p)
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col), det_cfg(),
+                                 device_loop=True)
+        glb.steal_loop()
+        seen = {}
+        for p in g.members:
+            r, idx = col.to_local_matrix(p)
+            for i, gid in enumerate(idx):
+                seen[int(gid)] = np.asarray(r)[i]
+        assert len(seen) == 64
+        for i in range(64):
+            assert np.array_equal(seen[i], rows[i]), f"row {i} corrupted"
+
+    def test_terminated_flag_on_empty_cluster(self):
+        g = PlaceGroup(4)
+        col = DistArray(g, track=True)
+        for p in g.members:
+            col.handle(p)
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col), det_cfg(),
+                                 device_loop=True)
+        res = glb.steal_loop()
+        assert res["stolen"] == 0
+        assert glb.is_terminated()
+
+    def test_device_loop_guards(self):
+        g, col = make_col(4, 100)
+        glb = GlobalLoadBalancer(
+            g, DistArrayWorkload(col),
+            GLBConfig(random_steal_attempts=2), device_loop=True)
+        with pytest.raises(ValueError, match="random_steal_attempts"):
+            glb.steal_loop()
+        multi = MultiCollectionWorkload(col, ())
+        glb2 = GlobalLoadBalancer(g, multi, det_cfg(), device_loop=True)
+        with pytest.raises(TypeError, match="DistArrayWorkload"):
+            glb2.steal_loop()
+
+    def test_capacity_floor_enforced(self):
+        g, col = make_col(4, 100)
+        glb = GlobalLoadBalancer(g, DistArrayWorkload(col), det_cfg(),
+                                 device_loop=True, device_capacity=50)
+        with pytest.raises(ValueError, match="capacity"):
+            glb.steal_loop()
+
+
+# ---------------------------------------------------------------------------
+# per-round step API: chained-hop hand-off matches host passes round by
+# round (the stepwise entry point resolves intra-round steal chains with
+# inventory-clamped all_to_all hops instead of the loop's fused transport)
+# ---------------------------------------------------------------------------
+def test_spmd_steal_step_matches_host_pass_by_pass():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import spmd_steal_step, steal_candidates
+
+    n, S = 4, 120
+    g_h, c_h = make_col(n, S, width=1)
+    glb_h = GlobalLoadBalancer(g_h, DistArrayWorkload(c_h), det_cfg())
+    cand, hops = steal_candidates(glb_h.lifelines, n)
+    candj, hopsj = jnp.asarray(cand), jnp.asarray(hops)
+    alive = jnp.ones(n, bool)
+
+    def step(x, valid, gids):
+        return spmd_steal_step(
+            x, valid, gids, axis_name="p", candidates=candj, hops=hopsj,
+            alive=alive, steal_ratio=0.5, min_keep=1, idle_threshold=0)
+
+    f = jax.jit(jax.vmap(step, axis_name="p"))
+    x = np.zeros((n, S, 1), np.float32)
+    valid = np.zeros((n, S), bool)
+    gids = np.full((n, S), -1, np.int32)
+    x[0, :, 0] = np.arange(S)
+    valid[0] = True
+    gids[0] = np.arange(S)
+    for _ in range(6):
+        moved_h = glb_h.steal_pass()
+        x, valid, gids, info = f(x, valid, gids)
+        x, valid, gids = (np.asarray(x), np.asarray(valid),
+                          np.asarray(gids))
+        # per-round parity: the chained hand-off realizes each round's
+        # sequential plan exactly (counts AND per-place occupancy)
+        assert int(np.asarray(info["moved"])[0]) == moved_h
+        assert valid.sum(1).tolist() \
+            == [c_h.local_size(p) for p in g_h.members]
+        ids = sorted(gids[valid].tolist())
+        assert ids == list(range(S)), "gids not conserved across hops"
+        if moved_h == 0:
+            break
+
+
+# ---------------------------------------------------------------------------
+# spmd_rebalance extras passthrough (used by the per-round step API)
+# ---------------------------------------------------------------------------
+def test_spmd_rebalance_extras_ride_the_same_routing():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import moves_to_matrix, spmd_rebalance
+    from repro.core.balancer import BalanceDecision
+
+    n, per, cap = 4, 6, 12
+    x = np.arange(n * per, dtype=np.float32)[:, None] + 1.0
+    tags = np.arange(n * per, dtype=np.int32) + 100
+    valid = np.ones(n * per, np.int32)
+    M = moves_to_matrix(BalanceDecision(((0, 2, 3), (1, 3, 2))), n)
+
+    def body(xl, vl, tl):
+        out, nv, (nt,) = spmd_rebalance(xl, vl, M, axis_name="x",
+                                        capacity=cap, extras=(tl,))
+        return out, nv.astype(jnp.int32), nt
+
+    f = jax.jit(jax.vmap(body, axis_name="x"))
+    out, nv, nt = f(x.reshape(n, per, 1), valid.reshape(n, per),
+                    tags.reshape(n, per))
+    out, nv, nt = np.asarray(out), np.asarray(nv).astype(bool), np.asarray(nt)
+    # every surviving row kept its tag attached
+    got = sorted((float(r[0]), int(t))
+                 for rs, vs, ts in zip(out, nv, nt)
+                 for r, v, t in zip(rs, vs, ts) if v)
+    assert got == [(float(i + 1), i + 100) for i in range(n * per)]
+    # rows landed per the plan
+    per_shard = nv.sum(1)
+    assert per_shard.tolist() == [per - 3, per - 2, per + 3, per + 2]
+
+
+# ---------------------------------------------------------------------------
+# deployment path: the same body under shard_map on an 8-device mesh
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_spmd_steal_loop_under_shard_map_matches_host():
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        import numpy as np
+        from functools import partial
+        from jax.sharding import PartitionSpec as P
+        from repro.compat import make_mesh, shard_map
+        from repro.core import (DistArray, DistArrayWorkload, GLBConfig,
+                                GlobalLoadBalancer, LongRange, PlaceGroup,
+                                hypercube_lifelines, spmd_steal_loop,
+                                steal_candidates)
+
+        n, S = 8, 400
+        mesh = make_mesh((8,), ("x",))
+        lifelines = hypercube_lifelines(n)
+        cand, hops = steal_candidates(lifelines, n)
+        candj, hopsj = jnp.asarray(cand), jnp.asarray(hops)
+        alive = jnp.ones(n, bool)
+
+        x = np.zeros((n * S, 1), np.float32)
+        valid = np.zeros((n * S,), np.int32)
+        gids = np.full((n * S,), -1, np.int32)
+        x[:S, 0] = np.arange(S)
+        valid[:S] = 1
+        gids[:S] = np.arange(S)
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("x"), P("x"), P("x")),
+                 out_specs=(P("x"), P("x"), P("x"), P()))
+        def f(xl, vl, gl):
+            out = spmd_steal_loop(
+                xl, vl.astype(bool), gl, axis_name="x", candidates=candj,
+                hops=hopsj, alive=alive, steal_ratio=0.5, min_keep=1,
+                idle_threshold=0, max_rounds=12, assume_prefix=True)
+            return (out["x"], out["valid"].astype(jnp.int32), out["gids"],
+                    out["stolen"])
+
+        ox, ov, og, stolen = f(x, valid, gids)
+        ov = np.asarray(ov).reshape(n, S).astype(bool)
+        og = np.asarray(og).reshape(n, S)
+        loads_dev = ov.sum(1).tolist()
+
+        # host reference: the same policy on the host steal path
+        g = PlaceGroup(n)
+        col = DistArray(g, track=True)
+        col.add_chunk(0, LongRange(0, S),
+                      np.arange(S, dtype=np.float64)[:, None])
+        for p in g.members:
+            col.handle(p)
+        glb = GlobalLoadBalancer(
+            g, DistArrayWorkload(col),
+            GLBConfig(lifeline="hypercube", random_steal_attempts=0))
+        res = glb.steal_loop(max_rounds=12)
+        loads_host = [col.local_size(p) for p in g.members]
+        assert loads_dev == loads_host, (loads_dev, loads_host)
+        assert int(np.asarray(stolen)) == res["stolen"]
+        ids = sorted(og[ov].tolist())
+        assert ids == list(range(S)), "gids not conserved"
+        print("ok")
+    """)
+    out = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "ok" in out.stdout
