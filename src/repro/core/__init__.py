@@ -53,6 +53,13 @@ from .teamed import (
     spmd_team_reduce,
     team_reduce,
 )
+from .transport import (
+    DeviceTransport,
+    HostTransport,
+    RelocationTransport,
+    TransportStats,
+    make_transport,
+)
 
 __all__ = [
     "Accumulator", "segment_accept",
@@ -71,4 +78,6 @@ __all__ = [
     "spmd_steal_step", "steal_candidates",
     "Reducer", "allgather1", "local_reduce", "spmd_allgather1",
     "spmd_team_reduce", "team_reduce",
+    "DeviceTransport", "HostTransport", "RelocationTransport",
+    "TransportStats", "make_transport",
 ]

@@ -47,14 +47,223 @@ def _fresh_global_id() -> int:
         return _NEXT_GLOBAL_ID[0]
 
 
-def _value_nbytes(x) -> int:
+def unique_leaves_nbytes(leaves, seen: set) -> int:
+    """Total bytes of ``leaves`` counting each distinct buffer once
+    (dedup by object identity — the single definition the §5.3 byte
+    accounting and ``SeqKV.nbytes`` both rest on)."""
+    total = 0
+    for leaf in leaves:
+        if id(leaf) in seen:
+            continue
+        seen.add(id(leaf))
+        lb = getattr(leaf, "nbytes", None)
+        total += int(lb) if lb is not None else int(np.asarray(leaf).nbytes)
+    return total
+
+
+def _value_nbytes(x, _seen: set | None = None) -> int:
     """Payload size without forcing a device→host transfer: device
     arrays (and pytree payloads exposing ``nbytes``, e.g. the serving
-    tier's per-sequence KV shards) report their size directly."""
-    nb = getattr(x, "nbytes", None)
-    if nb is not None:
-        return int(nb)
-    return int(np.asarray(x).nbytes)
+    tier's per-sequence KV shards) report their size directly.
+
+    Pytree values count each distinct buffer **once**: two leaves that
+    alias the same array object (a KV page shared between attention
+    groups, say) are one buffer on any real wire, so they are one buffer
+    in the §5.3 accounting too.  ``_seen`` extends the dedup across the
+    values of one payload."""
+    if _seen is None:
+        nb = getattr(x, "nbytes", None)
+        if nb is not None:
+            return int(nb)
+    elif isinstance(x, (np.ndarray, np.generic)):
+        # plain buffer value: id-dedup without paying a pytree flatten
+        # (this runs per entry, twice per window, on the delivery path)
+        if id(x) in _seen:
+            return 0
+        _seen.add(id(x))
+        return int(x.nbytes)
+    import jax
+
+    if _seen is not None and isinstance(x, jax.Array):
+        if id(x) in _seen:
+            return 0
+        _seen.add(id(x))
+        return int(x.nbytes)
+    leaves = jax.tree_util.tree_leaves(x)
+    if len(leaves) == 1 and leaves[0] is x:
+        if _seen is not None:
+            if id(x) in _seen:
+                return 0
+            _seen.add(id(x))
+        nb = getattr(x, "nbytes", None)
+        return int(nb) if nb is not None else int(np.asarray(x).nbytes)
+    return unique_leaves_nbytes(leaves,
+                                _seen if _seen is not None else set())
+
+
+# ---------------------------------------------------------------------------
+# Row codecs (transport layer, §5.3 Alltoallv payload encoding)
+#
+# A collection's payloads are Python structures (chunk arrays, key/value
+# pairs, pytrees of device buffers).  A *row codec* maps each payload to
+# fixed-width byte rows + a host-side manifest, so any transport — in
+# particular the device ``all_to_all`` of ``core/transport.py`` — can
+# ship them without knowing the collection's internals, and the receiver
+# can rebuild a bit-identical payload.  Encoding is alias-aware: leaves
+# that alias one buffer encode (and ship) once, and decoding rebinds
+# them, so both the §5.3 byte accounting and the reconstructed aliasing
+# match the source exactly.
+# ---------------------------------------------------------------------------
+def _dtype_token(dt) -> str:
+    """Manifest-safe dtype spelling: ``.str`` (endianness-exact) when it
+    round-trips, else ``.name`` — numpy extension dtypes (ml_dtypes
+    bfloat16/fp8) stringify as raw void ('<V2') through ``.str`` and
+    would silently decode as the wrong type."""
+    dt = np.dtype(dt)
+    return dt.str if np.dtype(dt.str) == dt else dt.name
+
+
+def _np_bytes(a) -> np.ndarray:
+    """1-D uint8 view-copy of an array's bytes (any layout/dtype)."""
+    a = np.ascontiguousarray(np.asarray(a))
+    return np.frombuffer(a.tobytes(), np.uint8)
+
+
+def _np_from_bytes(row, dtype, shape) -> np.ndarray:
+    nb = int(np.dtype(dtype).itemsize * np.prod(shape, dtype=np.int64))
+    buf = np.asarray(row, np.uint8)[:nb]
+    return np.frombuffer(buf.tobytes(), dtype=dtype).reshape(shape).copy()
+
+
+def _jax_leaf_bytes(x):
+    """Device-side byte view of a jax leaf (no host transfer)."""
+    import jax
+    import jax.numpy as jnp
+
+    if x.dtype == jnp.bool_:
+        x = x.astype(jnp.uint8)
+    return jax.lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+
+
+def _jax_leaf_from_bytes(row, dtype, shape):
+    """Inverse of :func:`_jax_leaf_bytes` — stays on device when ``row``
+    is a device buffer (the no-host-bounce decode path)."""
+    import jax
+    import jax.numpy as jnp
+
+    dt = np.dtype(dtype)
+    nb = int(dt.itemsize * np.prod(shape, dtype=np.int64))
+    u8 = jnp.asarray(row)[:nb].astype(jnp.uint8)
+    if dt == np.bool_:
+        return u8.reshape(shape).astype(jnp.bool_)
+    if dt.itemsize == 1:
+        return jax.lax.bitcast_convert_type(u8.reshape(shape),
+                                            jnp.dtype(dt))
+    return jax.lax.bitcast_convert_type(
+        u8.reshape(tuple(shape) + (dt.itemsize,)), jnp.dtype(dt))
+
+
+def _encode_value(v) -> tuple[Any, tuple]:
+    """One map/bag value → (1-D byte row, spec).
+
+    * plain host array → raw bytes (``("arr", dtype, shape, nbytes)``);
+    * pytree of array leaves (``SeqKV``, decode-state dicts, multimap
+      lists) → unique-leaf bytes concatenated, device-side (bitcast +
+      concat, no host bounce) when every leaf is a ``jax.Array``
+      (``("tree", treedef, leafspecs, alias, nbytes)``);
+    * anything else (e.g. ``serving.Sequence`` metadata) → pickle.
+    """
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(v)
+    plain_leaf = len(leaves) == 1 and leaves[0] is v
+    if plain_leaf and isinstance(v, np.generic) \
+            and not np.asarray(v).dtype.hasobject:
+        # numpy scalars decode back to scalars, not 0-d arrays —
+        # receivers may hash or compare them, and parity with the host
+        # loopback (which delivers the original object) demands it
+        row = _np_bytes(v)
+        return row, ("num", _dtype_token(np.asarray(v).dtype), len(row))
+    if plain_leaf and isinstance(v, np.ndarray) \
+            and not v.dtype.hasobject:
+        row = _np_bytes(v)
+        return row, ("arr", _dtype_token(v.dtype), v.shape, len(row))
+    # object-dtype arrays hold pointers, not bytes — pickle those whole
+    arrayish = all(isinstance(x, jax.Array) or
+                   (isinstance(x, (np.ndarray, np.generic))
+                    and not np.asarray(x).dtype.hasobject) for x in leaves)
+    if leaves and arrayish and (not plain_leaf or isinstance(v, jax.Array)):
+        uniq: list = []
+        index: dict[int, int] = {}
+        alias: list[int] = []
+        for x in leaves:
+            j = index.get(id(x))
+            if j is None:
+                j = len(uniq)
+                index[id(x)] = j
+                uniq.append(x)
+            alias.append(j)
+        specs, pieces = [], []
+        for x in uniq:
+            if isinstance(x, jax.Array):
+                pieces.append(_jax_leaf_bytes(x))
+                # dtype by *name*: ml_dtypes extensions (bfloat16, fp8)
+                # round-trip through np.dtype(name), their .str does not
+                specs.append(("jax", np.dtype(x.dtype).name,
+                              tuple(x.shape), int(x.nbytes)))
+            else:
+                a = np.asarray(x)
+                pieces.append(_np_bytes(a))
+                specs.append(("nps" if isinstance(x, np.generic) else "np",
+                              _dtype_token(a.dtype), a.shape,
+                              int(a.nbytes)))
+        total = int(sum(s[3] for s in specs))
+        if any(isinstance(p, jax.Array) for p in pieces):
+            import jax.numpy as jnp
+            row = jnp.concatenate(
+                [jnp.asarray(p, jnp.uint8) for p in pieces]) if pieces \
+                else jnp.zeros((0,), jnp.uint8)
+        else:
+            row = np.concatenate(pieces) if pieces \
+                else np.zeros((0,), np.uint8)
+        return row, ("tree", treedef, tuple(specs), tuple(alias), total)
+    import pickle
+
+    blob = pickle.dumps(v)
+    return np.frombuffer(blob, np.uint8), ("pkl", len(blob))
+
+
+def _decode_value(row, spec):
+    """Inverse of :func:`_encode_value`; ``row`` may be longer than the
+    encoded width (transport padding) and may be a device buffer."""
+    import jax
+
+    kind = spec[0]
+    if kind == "arr":
+        _, dt, shape, _ = spec
+        return _np_from_bytes(row, np.dtype(dt), shape)
+    if kind == "num":
+        _, dt, _ = spec
+        return _np_from_bytes(row, np.dtype(dt), ())[()]
+    if kind == "pkl":
+        import pickle
+
+        _, nb = spec
+        return pickle.loads(np.asarray(row, np.uint8)[:nb].tobytes())
+    _, treedef, specs, alias, _ = spec
+    uniq, off = [], 0
+    host_row = None
+    for lkind, dt, shape, nb in specs:
+        if lkind == "jax":
+            uniq.append(_jax_leaf_from_bytes(row[off:off + nb], dt, shape))
+        else:
+            if host_row is None:
+                host_row = np.asarray(row, np.uint8)
+            leaf = _np_from_bytes(host_row[off:off + nb],
+                                  np.dtype(dt), shape)
+            uniq.append(leaf[()] if lkind == "nps" else leaf)
+        off += nb
+    return jax.tree_util.tree_unflatten(treedef, [uniq[j] for j in alias])
 
 
 class PlaceGroup:
@@ -371,6 +580,33 @@ class DistArray(DistCollection):
         _, rows = payload
         return int(np.asarray(rows).nbytes) + 16
 
+    # -- row codec (transport layer) -------------------------------------
+    def encode_rows(self, payload):
+        """Chunk payload → ``(m, width)`` uint8 row matrix + manifest
+        (range, dtype, trailing shape) — the §5.3 Alltoallv wire format
+        a :class:`~repro.core.transport.DeviceTransport` ships."""
+        r, rows = payload
+        a = np.ascontiguousarray(np.asarray(rows))
+        m = int(a.shape[0]) if a.ndim else 0
+        width = int(a.nbytes // m) if m else 0
+        u8 = np.frombuffer(a.tobytes(), np.uint8).reshape(m, width) if m \
+            else np.zeros((0, 0), np.uint8)
+        return u8, ("chunk", r, _dtype_token(a.dtype), tuple(a.shape[1:]))
+
+    def decode_rows(self, rows, manifest):
+        """Inverse of :meth:`encode_rows`; ``rows`` may be wider than
+        the encoded width (transport padding) and may live on device."""
+        _, r, dt, trail = manifest
+        dtype = np.dtype(dt)
+        m = r.size
+        nb = int(dtype.itemsize * np.prod(trail, dtype=np.int64))
+        if m == 0:
+            return r, np.zeros((0,) + trail, dtype)
+        buf = np.asarray(rows, np.uint8)[:m, :nb]
+        arr = np.frombuffer(np.ascontiguousarray(buf).tobytes(),
+                            dtype=dtype).reshape((m,) + trail).copy()
+        return r, arr
+
 
 class DistBag(DistCollection):
     """Paper's ``DistBag``: unordered multiset, efficient concurrent
@@ -442,7 +678,26 @@ class DistBag(DistCollection):
         self.handle(dest).extend(payload)
 
     def _payload_nbytes(self, payload) -> int:
-        return int(sum(_value_nbytes(x) for x in payload)) + 16
+        # per-item dedup (items encode/ship independently)
+        return int(sum(_value_nbytes(x, set()) for x in payload)) + 16
+
+    # -- row codec (transport layer) -------------------------------------
+    def encode_rows(self, payload):
+        """Bag payload (item list, shapes may differ per item) → one
+        byte row per item + per-item specs.  ``put`` normalizes items to
+        arrays, but a foreign item (inserted through ``_insert_payload``
+        or a subclass) still encodes via the pickle fallback rather than
+        as an object array whose bytes would be pointers."""
+        rows, specs = [], []
+        for item in payload:
+            row, spec = _encode_value(item)
+            rows.append(row)
+            specs.append(spec)
+        return rows, ("bag", tuple(specs))
+
+    def decode_rows(self, rows, manifest):
+        _, specs = manifest
+        return [_decode_value(row, spec) for row, spec in zip(rows, specs)]
 
 
 class DistMap(DistCollection):
@@ -560,11 +815,38 @@ class DistMap(DistCollection):
                 h[k] = v
 
     def _payload_nbytes(self, payload) -> int:
+        # one `seen` set per VALUE: leaves aliased inside a value's
+        # pytree (shared KV pages) count once — the codec ships them
+        # once and rebinds them on decode.  Two *values* sharing a
+        # buffer still count (and ship) separately: each value is an
+        # independent wire row, so counting per value is what keeps the
+        # two accounting surfaces (counts matrix vs delivered bytes)
+        # equal on every transport.
         total = 16
         for k, v in payload:
             vv = v if isinstance(v, list) else [v]
-            total += 8 + sum(_value_nbytes(x) for x in vv)
+            seen: set = set()
+            total += 8 + sum(_value_nbytes(x, seen) for x in vv)
         return total
+
+    # -- row codec (transport layer) -------------------------------------
+    def encode_rows(self, payload):
+        """Key/value payload → one byte row per entry + (key, spec)
+        manifest.  Values that are pytrees of device buffers (``SeqKV``)
+        encode device-side — bitcast + concat, no host bounce — so a
+        :class:`~repro.core.transport.DeviceTransport` window moves
+        device-resident KV pages through the ``all_to_all`` directly."""
+        rows, entries = [], []
+        for k, v in payload:
+            row, spec = _encode_value(v)
+            rows.append(row)
+            entries.append((k, spec))
+        return rows, ("map", tuple(entries))
+
+    def decode_rows(self, rows, manifest):
+        _, entries = manifest
+        return [(k, _decode_value(row, spec))
+                for row, (k, spec) in zip(rows, entries)]
 
 
 class DistIdMap(DistMap):

@@ -165,11 +165,16 @@ class DistArrayWorkload:
     reconcile the tracked distribution on finish."""
 
     def __init__(self, col: DistArray, members: Sequence[int] | None = None,
-                 *, min_keep: int = 1):
+                 *, min_keep: int = 1, transport=None):
         self.col = col
         self.members = tuple(members) if members is not None \
             else col.group.members
         self.min_keep = min_keep
+        # Alltoallv back end for the per-window move managers; None
+        # inherits the balancer's GLBConfig(transport=...) at attach
+        from .transport import make_transport
+        self.transport = None if transport is None \
+            else make_transport(transport)
         self.last_transfer_count = 0   # entries actually moved (clamped)
 
     def loads(self) -> np.ndarray:
@@ -177,7 +182,7 @@ class DistArrayWorkload:
                           np.int64)
 
     def transfer(self, moves, *, asynchronous: bool = False, after=None):
-        mm = CollectiveMoveManager(self.col.group)
+        mm = CollectiveMoveManager(self.col.group, transport=self.transport)
         moved = 0
         for src_i, dest_i, count in moves:
             src, dest = self.members[src_i], self.members[dest_i]
@@ -209,8 +214,10 @@ class MultiCollectionWorkload(DistArrayWorkload):
     """
 
     def __init__(self, primary: DistArray, companions: Sequence[DistArray],
-                 members: Sequence[int] | None = None, *, min_keep: int = 1):
-        super().__init__(primary, members, min_keep=min_keep)
+                 members: Sequence[int] | None = None, *, min_keep: int = 1,
+                 transport=None):
+        super().__init__(primary, members, min_keep=min_keep,
+                         transport=transport)
         self.companions = tuple(companions)
 
     def layouts_consistent(self) -> bool:
@@ -229,7 +236,7 @@ class MultiCollectionWorkload(DistArrayWorkload):
             raise ValueError(
                 "companion layout diverged from primary; co-partitioned "
                 "collections must hold identical range layouts")
-        mm = CollectiveMoveManager(self.col.group)
+        mm = CollectiveMoveManager(self.col.group, transport=self.transport)
         moved = 0
         for src_i, dest_i, count in moves:
             src, dest = self.members[src_i], self.members[dest_i]
@@ -295,6 +302,10 @@ class GLBConfig:
     #                              buffer: window N delivers in the
     #                              background while N+1 packs)
     lifeline: str = "hypercube"  # "ring" | "hypercube"
+    transport: Any = "host"      # relocation data plane: "host" (numpy
+    #                              loopback), "device" (codec rows on a
+    #                              jitted masked all_to_all), or a
+    #                              RelocationTransport instance
     random_steal_attempts: int = 2
     steal_ratio: float = 0.5     # fraction of victim surplus per steal
     idle_threshold: int = 0      # idle when load <= this
@@ -373,6 +384,25 @@ class GlobalLoadBalancer:
         # the (stricter) config floor down to it.
         if hasattr(workload, "min_keep"):
             workload.min_keep = max(workload.min_keep, self.cfg.min_keep)
+        # one transport instance for every migration window of this
+        # balancer (shared jit caches).  A workload constructed with its
+        # own transport keeps it — and the balancer adopts it, so the
+        # steal loop's data plane always matches the migration windows'.
+        # A transport a *previous* balancer injected does not count as
+        # user-supplied: `_transport_from_glb` remembers the injected
+        # *instance*, so re-attaching under a new config re-resolves,
+        # while a transport the user assigned directly (a different
+        # object) is always respected.
+        from .transport import make_transport
+        if getattr(workload, "transport", None) is not None \
+                and workload.transport \
+                is not getattr(workload, "_transport_from_glb", None):
+            self.transport = workload.transport
+        else:
+            self.transport = make_transport(self.cfg.transport)
+            if hasattr(workload, "transport"):
+                workload.transport = self.transport
+                workload._transport_from_glb = self.transport
         self.policy = self.cfg.make_policy()
         self._alive: list[int] = list(range(self.n))
         self.lifelines = _LIFELINES[self.cfg.lifeline](self.n)
@@ -498,6 +528,22 @@ class GlobalLoadBalancer:
         (its delivery barrier — and the ``on_finish`` hook — are still
         ahead)."""
         return bool(self._pending)
+
+    def wait_extracted(self, timeout: float | None = None) -> bool:
+        """Block until every in-flight window's phase 1 — the counts
+        exchange plus payload *extraction* — has completed (and, by
+        FIFO chaining, every predecessor's delivery).  After a True
+        return, entries still resident in the workload's collections
+        are provably not in any in-flight payload, so the caller may
+        mutate them without racing a background transport encode — the
+        guarantee device-plane consumers (the serving driver's decode
+        rounds) need before touching resident state.  No-op when idle;
+        False when ``timeout`` expires first."""
+        if not self._pending:
+            return True
+        # the newest window's phase 1 only starts after its predecessor
+        # delivered, so waiting on it covers the whole pipeline
+        return self._pending[-1].wait_counts(timeout) is not None
 
     def _finish_oldest(self) -> None:
         """Commit the oldest in-flight window, accounting its stats
@@ -642,7 +688,13 @@ class GlobalLoadBalancer:
             self.workload.col, self.lifelines, self._alive,
             steal_ratio=self.cfg.steal_ratio, min_keep=self.cfg.min_keep,
             idle_threshold=self.cfg.idle_threshold, max_rounds=max_rounds,
-            capacity=self.device_capacity)
+            capacity=self.device_capacity,
+            # device-plane transports (DeviceTransport or any custom
+            # backend declaring device_plane=True): codec rows ride the
+            # loop's all_to_all payload slot instead of materializing
+            # host-side by id
+            ship_rows=bool(getattr(self.transport, "device_plane",
+                                   False)))
         dt_us = (time.perf_counter() - t0) * 1e6
         st = self.stats
         st.steals_attempted += res["attempted"]

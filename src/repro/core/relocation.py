@@ -8,7 +8,13 @@ Two halves, mirroring the paper's design:
   place calls :meth:`CollectiveMoveManager.sync`.  The wire protocol is
   the paper's §5.3 two-phase exchange — Alltoall on byte counts, then
   Alltoallv on payload — which we account explicitly so benchmarks can
-  report the communication volume.  ``sync_async(depth=2)`` double
+  report the communication volume.  *How* the Alltoallv payload crosses
+  places is pluggable (``CollectiveMoveManager(transport=...)``,
+  ``core/transport.py``): the default ``HostTransport`` is the numpy
+  loopback; ``DeviceTransport`` encodes each payload's rows into
+  fixed-width byte buffers via the owning collection's row codec and
+  ships them with one jitted masked ``all_to_all`` — both produce
+  bit-identical final collection state.  ``sync_async(depth=2)`` double
   buffers the exchange: phase 2 is split into background *delivery*
   (:meth:`AsyncRelocation.enqueue`) and a cheap *commit*
   (:meth:`AsyncRelocation.finish`), so window N delivers while window
@@ -39,6 +45,7 @@ import numpy as np
 from ..compat import axis_size
 from .collections import DistArray, DistBag, DistMap, PlaceGroup
 from .distribution import LongRange
+from .transport import TransportStats, make_transport
 
 __all__ = [
     "AsyncRelocation",
@@ -91,8 +98,12 @@ class CollectiveMoveManager:
     any place of the group.
     """
 
-    def __init__(self, group: PlaceGroup):
+    def __init__(self, group: PlaceGroup, transport=None):
         self.group = group
+        # the Alltoallv back end: None/"host" = numpy loopback (verbatim
+        # pass-through), "device" = codec + jitted masked all_to_all, or
+        # any RelocationTransport instance (shared jit caches)
+        self.transport = make_transport(transport)
         self._range_moves: list[_RangeMove] = []
         self._bag_moves: list[_BagMove] = []
         self._key_moves: list[_KeyMove] = []
@@ -100,6 +111,7 @@ class CollectiveMoveManager:
         self._inflight: list["AsyncRelocation"] = []
         self.last_counts_matrix: np.ndarray | None = None
         self.last_payload_bytes = 0
+        self.last_transport_stats: TransportStats | None = None
         self.syncs = 0
 
     # -- registration ----------------------------------------------------
@@ -138,6 +150,14 @@ class CollectiveMoveManager:
             raise ValueError("drain needs at least one destination != src")
         if isinstance(col, DistMap):
             keys = col.keys(src)
+            try:
+                # deterministic round-robin: handle dicts are insertion-
+                # ordered, and insertion order depends on how background
+                # deliveries interleaved with admissions — sorting makes
+                # the re-homing independent of that history
+                keys = sorted(keys)
+            except TypeError:
+                pass   # unorderable key mix: keep insertion order
             if rule is None:
                 assign = {k: dests[i % len(dests)]
                           for i, k in enumerate(keys)}
@@ -311,25 +331,35 @@ class CollectiveMoveManager:
 
         return counts, payloads
 
-    def _deliver_payloads(self, payloads: list) -> int:
-        """Phase 2a: insert payloads at their destinations (may run on a
-        window's background delivery thread — insertion takes each
-        collection's lock so it never races a successor window's
-        extraction).  Returns the off-place payload bytes."""
+    def _deliver_payloads(self, payloads: list,
+                          counts: np.ndarray | None = None
+                          ) -> tuple[int, TransportStats]:
+        """Phase 2a: run the transport's Alltoallv and insert the
+        delivered payloads at their destinations (may run on a window's
+        background delivery thread — insertion takes each collection's
+        lock so it never races a successor window's extraction).
+        Returns the off-place payload bytes + the window's wire stats."""
+        delivered, tstats = self.transport.exchange(self.group, counts,
+                                                    payloads)
         moved_bytes = 0
-        for col, src, dest, payload in payloads:
-            if src != dest:
-                moved_bytes += col._payload_nbytes(payload)
+        for col, src, dest, payload in delivered:
+            # one accounting walk per payload: the alias-aware dedup
+            # tree-flattens every value, too costly to run twice on the
+            # background delivery thread
+            nb = col._payload_nbytes(payload) if src != dest else 0
+            moved_bytes += nb
             with col._lock:
                 col._insert_payload(dest, payload)
-            col.comm.record(col._payload_nbytes(payload) if src != dest else 0)
-        return moved_bytes
+            col.comm.record(nb)
+        return moved_bytes, tstats
 
-    def _commit(self, counts: np.ndarray, moved_bytes: int) -> None:
+    def _commit(self, counts: np.ndarray, moved_bytes: int,
+                tstats: TransportStats | None = None) -> None:
         """Phase 2b: publish the window's accounting (FIFO with respect
         to delivery — runs at the commit barrier on the caller thread)."""
         self.last_counts_matrix = counts
         self.last_payload_bytes = moved_bytes
+        self.last_transport_stats = tstats
         self.syncs += 1
 
 
@@ -365,6 +395,7 @@ class AsyncRelocation:
         self._counts: np.ndarray | None = None
         self._payloads: list | None = None
         self._moved_bytes = 0
+        self.transport_stats: TransportStats | None = None
         self._exc: BaseException | None = None
         self._counts_ready = threading.Event()
         self._delivered = threading.Event()
@@ -453,7 +484,8 @@ class AsyncRelocation:
                 return
             if self._after is not None:
                 self._after._delivered.wait()
-            self._moved_bytes = self.manager._deliver_payloads(self._payloads)
+            self._moved_bytes, self.transport_stats = \
+                self.manager._deliver_payloads(self._payloads, self._counts)
             for col in self._update_dists:
                 col.update_dist()
         except BaseException as e:  # re-raised at the finish() barrier
@@ -499,7 +531,8 @@ class AsyncRelocation:
             self._delivered.wait()
         if self._exc is not None:
             raise self._exc
-        self.manager._commit(self._counts, self._moved_bytes)
+        self.manager._commit(self._counts, self._moved_bytes,
+                             self.transport_stats)
         self._payloads = None   # a chained successor must not pin them
         self.trace["t_done"] = time.perf_counter()
         self.finished = True

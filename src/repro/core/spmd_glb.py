@@ -387,9 +387,12 @@ _LOOP_CACHE: dict = {}
 def _loop_fn(n: int, S: int, cand_b: bytes, hops_b: bytes,
              alive_b: bytes, steal_ratio: float, min_keep: int,
              idle_threshold: int, max_rounds: int):
-    """Jitted vmap runner over id-payload buffers, cached per static
+    """Jitted vmap runner over payload buffers, cached per static
     configuration so repeated steal loops (benchmark iterations,
-    successive GLB calls) reuse one compilation."""
+    successive GLB calls) reuse one compilation.  The payload slot ``x``
+    is shape-polymorphic (jit retraces per buffer shape): the id-mode
+    caller passes the id column, the device-transport caller passes the
+    codec's fixed-width byte rows."""
     key = (n, S, cand_b, hops_b, alive_b, steal_ratio, min_keep,
            idle_threshold, max_rounds)
     fn = _LOOP_CACHE.get(key)
@@ -400,11 +403,9 @@ def _loop_fn(n: int, S: int, cand_b: bytes, hops_b: bytes,
         hops = jnp.asarray(np.frombuffer(hops_b, np.int32).reshape(n, k))
         alive = jnp.asarray(np.frombuffer(alive_b, np.bool_))
 
-        def per_shard(valid, gids):
-            # the id column doubles as the row payload for a
-            # host-resident collection
+        def per_shard(x, valid, gids):
             return spmd_steal_loop(
-                gids[:, None], valid, gids, axis_name="places",
+                x, valid, gids, axis_name="places",
                 candidates=candidates, hops=hops, alive=alive,
                 steal_ratio=steal_ratio, min_keep=min_keep,
                 idle_threshold=idle_threshold, max_rounds=max_rounds,
@@ -419,19 +420,31 @@ def run_device_steal(col, lifelines: dict[int, tuple[int, ...]],
                      alive: Sequence[int], *, steal_ratio: float,
                      min_keep: int, idle_threshold: int,
                      max_rounds: int = 12,
-                     capacity: int | None = None) -> dict:
+                     capacity: int | None = None,
+                     ship_rows: bool = False) -> dict:
     """Run the jit-resident steal loop over a tracked :class:`DistArray`.
 
-    Packs each place's *entry ids* into a fixed ``capacity``-slot device
+    Packs each place's entries into a fixed ``capacity``-slot device
     buffer, executes all rounds in **one** jitted call, then rebuilds
-    the per-place chunks from the relocated ids and reconciles the
-    tracked distribution **once** at the end (a single ``update_dist``,
-    versus one per host steal).  For this host-resident collection the
-    ids are the relocated payload; the rows themselves are materialized
-    host-side from the original chunks by id, so any dtype — float64
-    included — round-trips bit-exactly.  (A device-resident collection
-    ships its rows through the same loop's payload slot, as the
-    shard_map tier exercises.)
+    the per-place chunks and reconciles the tracked distribution
+    **once** at the end (a single ``update_dist``, versus one per host
+    steal).
+
+    Two data planes, selected by ``ship_rows`` (the GLB maps its
+    ``GLBConfig(transport=...)`` onto it):
+
+    * ``ship_rows=False`` — the *host* data plane: entry ids are the
+      relocated device payload; the rows themselves are materialized
+      host-side from the original chunks by id (the host memory bounce
+      a real deployment would pay), so any dtype — float64 included —
+      round-trips bit-exactly.
+    * ``ship_rows=True`` — the *device* data plane: each row is encoded
+      to fixed-width bytes by the collection's row codec
+      (``DistArray.encode_rows``) and rides the loop's masked
+      ``all_to_all`` payload slot next to its id; the receiver decodes
+      bit-exactly (uint8 is dtype-safe without x64) and no host
+      materialization happens.  Both planes run the identical jitted
+      plan, so they produce *bit-identical* final collection state.
 
     ``capacity`` defaults to the global entry count — the always-safe
     bound under which the plan's buffer clamp never binds, so the final
@@ -453,6 +466,8 @@ def run_device_steal(col, lifelines: dict[int, tuple[int, ...]],
     first = next(rows for rows, idx in per_place if len(idx))
     trail = tuple(np.asarray(first).shape[1:])
     orig_dtype = np.asarray(first).dtype
+    row_nbytes = int(np.prod(trail, dtype=np.int64) * orig_dtype.itemsize) \
+        if trail else orig_dtype.itemsize
     S = int(capacity) if capacity is not None else total
     if max(sizes) > S:
         raise ValueError(
@@ -467,24 +482,38 @@ def run_device_steal(col, lifelines: dict[int, tuple[int, ...]],
             raise ValueError("global indices exceed the int32 id payload")
         valid[i, :m] = True
         gids[i, :m] = idx
+    if ship_rows:
+        # codec-encoded byte rows ride the all_to_all payload slot
+        x = np.zeros((n, S, row_nbytes), np.uint8)
+        for i, (rows, idx) in enumerate(per_place):
+            m = len(idx)
+            if m:
+                u8, _ = col.encode_rows(
+                    (LongRange(0, m), np.asarray(rows)))
+                x[i, :m] = u8
+    else:
+        # the id column doubles as the payload for the host data plane
+        x = np.where(valid, gids, 0).astype(np.int32)[:, :, None]
     cand, hops = steal_candidates(lifelines, n)
     alive_mask = np.zeros(n, np.bool_)
     alive_mask[list(alive)] = True
     fn = _loop_fn(n, S, cand.tobytes(), hops.tobytes(),
                   alive_mask.tobytes(), float(steal_ratio), int(min_keep),
                   int(idle_threshold), int(max_rounds))
-    out = jax.tree_util.tree_map(np.asarray, fn(valid, gids))
+    out = jax.tree_util.tree_map(np.asarray, fn(x, valid, gids))
 
     # the plan is replicated — every shard reports identical stats
     stolen = int(out["stolen"][0])
     nvalid, ngids = out["valid"], out["gids"]
     assert int(nvalid.sum()) == total, "device steal lost rows"
-    # host-side id -> row lookup over the original chunks (dtype-exact)
-    all_rows = np.concatenate([np.asarray(rows) for rows, idx in per_place
-                               if len(idx)], axis=0)
-    all_idx = np.concatenate([idx for _, idx in per_place if len(idx)])
-    order = np.argsort(all_idx, kind="stable")
-    all_rows, all_idx = all_rows[order], all_idx[order]
+    if not ship_rows:
+        # host-side id -> row lookup over the original chunks (dtype-exact)
+        all_rows = np.concatenate([np.asarray(rows)
+                                   for rows, idx in per_place if len(idx)],
+                                  axis=0)
+        all_idx = np.concatenate([idx for _, idx in per_place if len(idx)])
+        order = np.argsort(all_idx, kind="stable")
+        all_rows, all_idx = all_rows[order], all_idx[order]
     # rebuild the chunks: each place's relocated ids sorted, split into
     # consecutive runs; one update_dist reconciles the tracked
     # distribution for the whole loop
@@ -494,16 +523,25 @@ def run_device_steal(col, lifelines: dict[int, tuple[int, ...]],
         v = nvalid[i]
         if not v.any():
             continue
-        g = np.sort(ngids[i][v].astype(np.int64))
-        r = all_rows[np.searchsorted(all_idx, g)]
+        g = ngids[i][v].astype(np.int64)
+        order = np.argsort(g, kind="stable")
+        g = g[order]
+        if ship_rows:
+            # decode the relocated byte rows directly — the rows arrived
+            # with their ids, no host materialization needed
+            from .collections import _dtype_token
+            _, r = col.decode_rows(
+                np.ascontiguousarray(out["x"][i][v][order]),
+                ("chunk", LongRange(0, len(g)), _dtype_token(orig_dtype),
+                 trail))
+        else:
+            r = all_rows[np.searchsorted(all_idx, g)]
         splits = np.nonzero(np.diff(g) != 1)[0] + 1
         for grun, rrun in zip(np.split(g, splits), np.split(r, splits)):
             col.handle(p).add_chunk(
                 LongRange(int(grun[0]), int(grun[-1]) + 1), rrun)
     if col.track:
         col.update_dist()
-    row_nbytes = int(np.prod(trail, dtype=np.int64) * orig_dtype.itemsize) \
-        if trail else orig_dtype.itemsize
     return {
         "rounds": int(out["rounds"][0]),
         "attempted": int(out["attempted"][0]),

@@ -1,0 +1,352 @@
+"""Pluggable relocation transports — one data plane for every payload.
+
+The §5.3 two-phase exchange has two halves: *what* moves (the payloads
+``CollectiveMoveManager._phase1`` extracts from the collections) and
+*how* it moves.  BCL and DASH both get portability by isolating their
+containers from the communication backend behind a thin transport
+interface; this module does the same for the relocation engine:
+
+* :class:`RelocationTransport` — the protocol.  ``exchange(group,
+  counts, payloads)`` takes the phase-1 byte-count matrix plus the
+  extracted ``(collection, src, dest, payload)`` tuples and returns the
+  payloads *as the destination receives them*, with a per-window
+  :class:`TransportStats`.
+
+* :class:`HostTransport` — today's numpy loopback, verbatim: payloads
+  pass through by reference (the single-process emulation of the host
+  Alltoallv).  Zero copies, zero behavior change — the default.
+
+* :class:`DeviceTransport` — the wire actually rides the device: each
+  payload's rows are encoded into fixed-width byte buffers by the
+  owning collection's row codec (``encode_rows``/``decode_rows`` —
+  ``SeqKV`` pytrees bitcast + concat *on device*, so KV pages never
+  bounce through host memory), packed into per-place send buffers under
+  the prefix invariant, shipped with **one** jitted masked
+  ``all_to_all`` (reusing ``core/spmd_glb._ship_hop``'s cumsum/
+  searchsorted pack/compact machinery), and decoded on the receiver
+  into bit-identical payloads.
+
+Both backends produce bit-identical final collection state under the
+existing pipeline-depth-2 window chaining, evictions, and
+admission-time puts (``tests/test_transport.py`` asserts it); the
+``reloc_transport`` benchmark row measures the device win on the
+hot-shard steal configuration.
+
+A self-destined payload never reaches the wire on either backend — the
+counts diagonal stays zero, keeping the two §5.3 accounting surfaces
+(``last_counts_matrix.sum() == last_payload_bytes``) in agreement.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Protocol, Sequence, runtime_checkable
+
+import numpy as np
+
+__all__ = [
+    "RelocationTransport",
+    "TransportStats",
+    "HostTransport",
+    "DeviceTransport",
+    "make_transport",
+]
+
+
+@dataclass
+class TransportStats:
+    """One relocation window's wire accounting, per transport."""
+
+    kind: str = "host"
+    payloads: int = 0        # payload tuples that crossed places
+    local: int = 0           # self-destined payloads (never on the wire)
+    rows: int = 0            # encoded rows exchanged (device path)
+    row_bytes: int = 0       # unpadded payload bytes on the wire
+    wire_bytes: int = 0      # valid rows × padded class width (row
+    #                          padding included; the dense buffers'
+    #                          empty capacity slots are not)
+    width: int = 0           # widest padded row-width class exchanged
+    exchanges: int = 0       # jitted all_to_all dispatches (one per
+    #                          row-width class in the window)
+
+
+@runtime_checkable
+class RelocationTransport(Protocol):
+    """How extracted payloads cross places (the Alltoallv back end).
+
+    A transport may also declare ``device_plane = True`` to tell the
+    GLB's jit-resident steal loop that rows should ride the loop's own
+    ``all_to_all`` payload slot (``run_device_steal(ship_rows=True)``)
+    instead of materializing host-side by id — so custom device-class
+    backends keep steal and migration on one data plane."""
+
+    device_plane: bool = False
+
+    def exchange(self, group, counts: np.ndarray | None,
+                 payloads: Sequence[tuple]) -> tuple[list, TransportStats]:
+        """Ship phase-1 payloads; return them as delivered (same order
+        as ``payloads`` — insertion order is part of determinism).
+
+        ``counts`` is the window's phase-1 place×place *byte*-count
+        matrix — informational, for flow control or validation by
+        custom backends (rate limiting, chunking a huge window).  The
+        built-in backends derive their own row counts from the payloads
+        and ignore it."""
+        ...
+
+
+class HostTransport:
+    """Today's numpy loopback, extracted verbatim from the move
+    manager: within one process the host Alltoallv is reference
+    passing — the delivered payload *is* the extracted payload.  The
+    object-identity semantics the serving tier relies on (a ``SeqKV``
+    mutated in place while in flight still lands fresh) hold only on
+    this backend."""
+
+    device_plane = False
+
+    def exchange(self, group, counts, payloads):
+        stats = TransportStats(kind="host")
+        for _, src, dest, _ in payloads:
+            if src == dest:
+                stats.local += 1
+            else:
+                stats.payloads += 1
+        return list(payloads), stats
+
+
+class DeviceTransport:
+    """Payload rows ride jitted masked ``all_to_all`` exchanges.
+
+    A window's payloads are bucketed by *row-width class* (next power
+    of two ≥ the payload's widest row, floored at ``pad_multiple``) and
+    each class runs one collective — so a window carrying both small
+    metadata rows and KV pages pads neither to the other's width.
+    Buffer capacity is rounded to a power of two too, so the jit cache
+    keys (n, capacity, width) recur across windows of similar traffic
+    instead of recompiling per exact row count.
+
+    Delivered payloads are *reconstructions* (bit-identical bytes, new
+    objects): alias structure inside a payload is preserved by the
+    codec, object identity across the wire is not — exactly like a real
+    multi-host deployment.
+    """
+
+    device_plane = True
+
+    def __init__(self, *, pad_multiple: int = 8):
+        import threading
+
+        self.pad_multiple = int(pad_multiple)
+        self._fns: dict = {}
+        self.lifetime = TransportStats(kind="device")
+        # one shared instance serves many managers' background delivery
+        # threads (the README's shared-jit-cache pattern) — the counter
+        # read-modify-writes must not interleave across them
+        self._lifetime_lock = threading.Lock()
+
+    # -- the jitted exchange (cached per (n, S, W)) -----------------------
+    def _exchange_fn(self, n: int, S: int, W: int):
+        key = (n, S, W)
+        fn = self._fns.get(key)
+        if fn is None:
+            import jax
+            import jax.numpy as jnp
+
+            from .spmd_glb import _ship_hop
+
+            def per_shard(buf, ship):
+                # prefix invariant: each shard's outgoing rows occupy
+                # slots [0, sum(ship[me])) grouped by destination — the
+                # same layout _ship_hop's cumsum gathers assume, so the
+                # whole exchange is one masked all_to_all, no sort
+                me = jax.lax.axis_index("transport")
+                count = jnp.sum(ship[me])
+                gids = jnp.zeros((S,), jnp.int32)
+                nx, _, _ = _ship_hop(buf, gids, count, ship,
+                                     axis_name="transport")
+                return nx
+
+            fn = jax.jit(jax.vmap(per_shard, axis_name="transport",
+                                  in_axes=(0, None)))
+            self._fns[key] = fn
+        return fn
+
+    def exchange(self, group, counts, payloads):
+        import jax
+
+        n = group.size()
+        place_index = {p: i for i, p in enumerate(group.members)}
+        stats = TransportStats(kind="device")
+
+        # encode off-place payloads; self-moves bypass the wire verbatim
+        entries: dict[int, dict] = {}   # payload position -> wire entry
+        for pos, (col, src, dest, payload) in enumerate(payloads):
+            if src == dest:
+                stats.local += 1
+                continue
+            rows, manifest = col.encode_rows(payload)
+            if isinstance(rows, np.ndarray) and rows.ndim == 2:
+                # chunk payloads stay one (m, w) matrix end to end: the
+                # pack is a single block copy, never m row assignments
+                e = {"pos": pos, "si": place_index[src],
+                     "di": place_index[dest], "mat": rows,
+                     "m": int(rows.shape[0]), "wmax": int(rows.shape[1]),
+                     "nbytes": int(rows.size), "manifest": manifest,
+                     "dev": False}
+            else:
+                rows = list(rows)
+                widths = [int(r.shape[0]) for r in rows]
+                e = {"pos": pos, "si": place_index[src],
+                     "di": place_index[dest], "rows": rows,
+                     "widths": widths, "m": len(rows),
+                     "wmax": max(widths, default=0),
+                     "nbytes": int(sum(widths)), "manifest": manifest,
+                     "dev": any(isinstance(r, jax.Array) for r in rows)}
+            entries[pos] = e
+            stats.payloads += 1
+            stats.rows += e["m"]
+            stats.row_bytes += e["nbytes"]
+
+        delivered = list(payloads)
+        # decode zero-row payloads host-side (delivered objects are
+        # reconstructions even when nothing crossed the wire); bucket
+        # the rest by padded row-width class — one masked all_to_all per
+        # class, so small metadata rows (a pickled Sequence) never pad
+        # to a KV page's width when both ride one window
+        buckets: dict[int, list[dict]] = {}
+        for e in entries.values():
+            if e["m"] == 0:
+                col, src, dest, _ = payloads[e["pos"]]
+                delivered[e["pos"]] = (col, src, dest,
+                                       col.decode_rows([], e["manifest"]))
+                continue
+            buckets.setdefault(self._width_class(e["wmax"]), []).append(e)
+        for W, bucket in sorted(buckets.items()):
+            self._exchange_bucket(n, W, bucket, payloads, delivered, stats)
+        with self._lifetime_lock:
+            lt = self.lifetime
+            lt.payloads += stats.payloads
+            lt.local += stats.local
+            lt.rows += stats.rows
+            lt.row_bytes += stats.row_bytes
+            lt.wire_bytes += stats.wire_bytes
+            lt.exchanges += stats.exchanges
+            lt.width = max(lt.width, stats.width)
+        return delivered, stats
+
+    def _width_class(self, w: int) -> int:
+        """Next power of two ≥ ``w`` (floored at ``pad_multiple``) — the
+        bucket key, so windows of similar payloads hit one jit entry."""
+        w = max(int(w), self.pad_multiple)
+        return 1 << (w - 1).bit_length()
+
+    def _exchange_bucket(self, n, W, bucket, payloads, delivered, stats):
+        """One masked ``all_to_all`` over the entries of one row-width
+        class; decodes straight into ``delivered``."""
+        per_src: list[list[dict]] = [[] for _ in range(n)]
+        # each sender's prefix is grouped by destination (stable within
+        # a destination: registration order) — the receive side then
+        # reads contiguous blocks per (src, dest) pair
+        for e in bucket:
+            per_src[e["si"]].append(e)
+        for si in range(n):
+            per_src[si].sort(key=lambda e: e["di"])
+        ship = np.zeros((n, n), np.int32)
+        for e in bucket:
+            ship[e["si"], e["di"]] += e["m"]
+        # capacity covers BOTH sides of the exchange — the busiest
+        # sender's outgoing total and the busiest receiver's incoming
+        # total (_ship_hop's receive prefix lands in the same S slots;
+        # fan-in past S would silently drop rows) — rounded to the next
+        # power of two so successive windows of similar traffic reuse
+        # one (n, S, W) jit specialization instead of recompiling per
+        # exact row count
+        S = int(max(ship.sum(axis=1).max(), ship.sum(axis=0).max(), 1))
+        S = 1 << (S - 1).bit_length()
+        buf = self._pack(per_src, n, S, W,
+                         device=any(e["dev"] for e in bucket))
+
+        recv = self._exchange_fn(n, S, W)(buf, ship)
+        stats.exchanges += 1
+        stats.width = max(stats.width, W)
+        stats.wire_bytes += int(ship.sum()) * W
+
+        # receive layout: shard d's prefix holds, for src 0..n-1, the
+        # ship[src, d] rows that src packed for d, in src's order
+        host_recv = np.asarray(recv) \
+            if any(not e["dev"] for e in bucket) else None
+        offsets = np.zeros(n, np.int64)
+        for si in range(n):
+            for e in per_src[si]:
+                di, m = e["di"], e["m"]
+                lo = int(offsets[di])
+                block = (recv if e["dev"] else host_recv)[di, lo:lo + m]
+                offsets[di] += m
+                rows = block if "mat" in e \
+                    else [block[i] for i in range(m)]
+                col, src, dest, _ = payloads[e["pos"]]
+                delivered[e["pos"]] = (
+                    col, src, dest, col.decode_rows(rows, e["manifest"]))
+
+    def _pack(self, per_src, n, S, W, *, device):
+        """(n, S, W) uint8 send buffer under the prefix invariant; built
+        with jnp when any row is a device buffer (KV pages never touch
+        host memory on the way in).  Chunk matrices land as one block
+        copy each; only genuinely ragged per-row payloads loop."""
+        if not device:
+            buf = np.zeros((n, S, W), np.uint8)
+            for si in range(n):
+                off = 0
+                for e in per_src[si]:
+                    if "mat" in e:
+                        buf[si, off:off + e["m"], :e["wmax"]] = e["mat"]
+                        off += e["m"]
+                    else:
+                        for r, w in zip(e["rows"], e["widths"]):
+                            buf[si, off, :w] = np.asarray(r, np.uint8)
+                            off += 1
+            return buf
+        import jax.numpy as jnp
+
+        shards = []
+        for si in range(n):
+            blocks = []
+            for e in per_src[si]:
+                if "mat" in e:
+                    blk = jnp.asarray(e["mat"], jnp.uint8)
+                    if e["wmax"] < W:
+                        blk = jnp.pad(blk, ((0, 0), (0, W - e["wmax"])))
+                    blocks.append(blk)
+                    continue
+                for r, w in zip(e["rows"], e["widths"]):
+                    r = jnp.asarray(r, jnp.uint8)
+                    if w < W:
+                        r = jnp.concatenate(
+                            [r, jnp.zeros((W - w,), jnp.uint8)])
+                    blocks.append(r[None, :])
+            m = sum(int(b.shape[0]) for b in blocks)
+            blocks.append(jnp.zeros((S - m, W), jnp.uint8))
+            shards.append(jnp.concatenate(blocks))
+        return jnp.stack(shards)
+
+
+def make_transport(spec: Any) -> RelocationTransport:
+    """``None``/``"host"`` → :class:`HostTransport`, ``"device"`` →
+    :class:`DeviceTransport`, an instance passes through (shared jit
+    caches across managers/windows)."""
+    if spec is None or spec == "host":
+        return HostTransport()
+    if spec == "device":
+        return DeviceTransport()
+    if isinstance(spec, str):
+        raise ValueError(f"unknown transport {spec!r} "
+                         "(expected 'host' or 'device')")
+    # fail at config time, not on a background delivery thread: the
+    # instance must implement the protocol (a bare class — an easy
+    # typo — is rejected too)
+    if isinstance(spec, type) \
+            or not callable(getattr(spec, "exchange", None)):
+        raise TypeError(
+            f"transport {spec!r} does not implement RelocationTransport "
+            "(pass an instance with an exchange() method)")
+    return spec

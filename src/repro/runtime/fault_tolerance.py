@@ -32,7 +32,7 @@ __all__ = ["HeartbeatMonitor", "StragglerMitigator", "ElasticWorld",
 
 
 def rehome_dead_place(group: PlaceGroup, dead: int, collections,
-                      *, dests=None) -> int:
+                      *, dests=None, transport=None) -> int:
     """Drain-and-re-home: move every entry held by ``dead`` onto the
     surviving places through one collective relocation window (all
     collections ride the same sync — paper Listing 12), then reconcile
@@ -44,7 +44,9 @@ def rehome_dead_place(group: PlaceGroup, dead: int, collections,
     entries a new home via the relocation engine."""
     dests = [p for p in (dests if dests is not None else group.members)
              if p != dead and p in group]
-    mm = CollectiveMoveManager(group)
+    # the re-homing window rides the same relocation data plane as the
+    # regular migrations (``transport=`` from the driver/GLB)
+    mm = CollectiveMoveManager(group, transport=transport)
     moved = 0
     for col in collections:
         moved += mm.register_drain(col, dead, dests)
@@ -110,16 +112,19 @@ class ElasticWorld:
         self.group = group
         self.events: list[tuple[str, int]] = []
 
-    def evict(self, dead: int, collections=()) -> PlaceGroup:
+    def evict(self, dead: int, collections=(),
+              transport=None) -> PlaceGroup:
         """Failure path of :meth:`resize`: drop ``dead`` from the group
         and re-home its entries on the survivors via the relocation
-        engine (one collective window for all collections)."""
+        engine (one collective window for all collections, on the
+        caller's relocation ``transport``)."""
         if dead not in self.group.members:
             return self.group
         survivors = [p for p in self.group.members if p != dead]
         if not survivors:
             raise ValueError("cannot evict the last place")
-        rehome_dead_place(self.group, dead, collections)
+        rehome_dead_place(self.group, dead, collections,
+                          transport=transport)
         new_group = self.group.subgroup(survivors)
         for col in collections:
             col.group = new_group
@@ -206,13 +211,15 @@ class FaultTolerantDriver:
             self.glb.finish()
             for p in dead:
                 if self.world is not None:
-                    self.world.evict(p, self.glb_collections)
+                    self.world.evict(p, self.glb_collections,
+                                     transport=self.glb.transport)
                 else:
                     # survivors only: the glb group never shrinks, so
                     # earlier-evicted places must not be drain targets
                     rehome_dead_place(self.glb.group, p,
                                       self.glb_collections,
-                                      dests=self.glb.alive_members())
+                                      dests=self.glb.alive_members(),
+                                      transport=self.glb.transport)
                 self.glb.evict_place(p)
                 self.evictions += 1
             info["evicted"] = dead

@@ -49,8 +49,13 @@ class SeqKV:
     @property
     def nbytes(self) -> int:
         """Payload size (what the §5.3 byte accounting reports) without
-        forcing a device→host transfer."""
-        return int(sum(x.nbytes for x in jax.tree_util.tree_leaves(self)))
+        forcing a device→host transfer.  Counts each distinct buffer
+        once: leaves aliasing one page (K/V groups sharing storage)
+        cross any real wire once, so they are one buffer here too —
+        same dedup definition as the relocation engine's accounting."""
+        from ..core.collections import unique_leaves_nbytes
+
+        return unique_leaves_nbytes(jax.tree_util.tree_leaves(self), set())
 
     def on_device(self) -> bool:
         return all(isinstance(x, jax.Array)

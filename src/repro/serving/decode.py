@@ -225,6 +225,9 @@ class RealDecodeSim:
     pipeline_depth: int = 1      # 2 = double-buffered migration windows:
     #                              window N's KV delivery overlaps the
     #                              decode rounds while window N+1 packs
+    transport: object = None     # relocation data plane ("host"/"device":
+    #                              KV migration windows ship device pages
+    #                              through the jitted all_to_all)
     seed: int = 0
     engine: DecodeEngine | None = None
 
@@ -240,7 +243,7 @@ class RealDecodeSim:
                           asynchronous=True,
                           pipeline_depth=self.pipeline_depth),
             heartbeat_timeout=self.heartbeat_timeout,
-            engine=self.engine)
+            engine=self.engine, transport=self.transport)
         if not self.work:
             self.work = (1,) * self.n_replicas
         self.rng = np.random.default_rng(self.seed)

@@ -61,7 +61,8 @@ class ElasticServingDriver:
     def __init__(self, n_replicas: int, *, slots_per_replica: int = 32,
                  glb: GLBConfig | None = None, heartbeat_timeout: int = 2,
                  page_tokens: int = 16, traffic_ema: float = 0.5,
-                 engine=None, admission: str = "traffic"):
+                 engine=None, admission: str = "traffic",
+                 transport=None):
         if admission not in ("traffic", "count"):
             raise ValueError(f"unknown admission policy {admission!r}")
         self.group = PlaceGroup(n_replicas)
@@ -74,14 +75,22 @@ class ElasticServingDriver:
             self.seqs.handle(p)
             self.kv.handle(p)
         self.cost = TokenCostModel(page_tokens)
+        # explicit driver transport beats the GLB config's default
+        # (TrafficWorkload resolves the spec; a non-None workload
+        # transport wins at balancer attach); "device" makes every KV
+        # migration window ship its pages through the jitted all_to_all
+        # (no host bounce)
         self.workload = TrafficWorkload(self.seqs, self.kv,
                                         cost_model=self.cost,
-                                        ema=traffic_ema)
+                                        ema=traffic_ema,
+                                        transport=transport)
         self.router = Router(self.seqs)
         self.glb = GlobalLoadBalancer(
             self.group, self.workload,
             glb or GLBConfig(period=4, policy="proportional", ema=0.3),
             on_finish=self._window_finished)
+        # resolved data plane (the GLB filled a None in from its config)
+        self.transport = self.workload.transport
         self.monitor = HeartbeatMonitor(n_replicas,
                                         timeout_steps=heartbeat_timeout)
         self.world = ElasticWorld(self.group)
@@ -168,6 +177,7 @@ class ElasticServingDriver:
         and are evicted once the monitor times them out.
         """
         info: dict = {}
+        self._settle_device_plane_extraction()
         self._admit_traffic = None     # residency changes this round
         failed = set(failed)
         for p in self.group.members:
@@ -245,6 +255,7 @@ class ElasticServingDriver:
         if self.engine is None:
             raise ValueError("decode_round needs an engine "
                              "(ElasticServingDriver(..., engine=...))")
+        self._settle_device_plane_extraction()
         members = self.workload.members
         t = np.full(len(members), np.nan)
         decoded = 0
@@ -269,6 +280,20 @@ class ElasticServingDriver:
         info["decoded"] = decoded
         return info
 
+    def _settle_device_plane_extraction(self) -> None:
+        """Device-plane windows deliver point-in-time *reconstructions*
+        (the codec encodes at delivery), so a round that mutates
+        resident entries must not start until the in-flight window's
+        extraction finished — otherwise an entry grabbed between the
+        residency check and extraction could be mutated while the
+        background encode reads it (stale or torn payload at the
+        destination).  Host-plane windows deliver the objects
+        themselves, where late mutations land by design, so they skip
+        this wait.  Extraction overlaps the *previous* round's tail, so
+        the wait is normally instant."""
+        if getattr(self.workload.transport, "device_plane", False):
+            self.glb.wait_extracted()
+
     def _collect_orphaned_kv(self) -> None:
         """Reap KV pages whose sequence retired while the pages were in
         a migration window (they get delivered ownerless)."""
@@ -289,7 +314,8 @@ class ElasticServingDriver:
         self.router.mark_dead(dead)
         self.glb.finish()
         before = self.seqs.local_size(dead) if dead in self.group else 0
-        self.group = self.world.evict(dead, (self.seqs, self.kv))
+        self.group = self.world.evict(dead, (self.seqs, self.kv),
+                                      transport=self.transport)
         self.glb.evict_place(self.workload.members.index(dead))
         self.rehomed_seqs += before
         self.evicted.append(dead)
@@ -344,6 +370,7 @@ class ServingSim:
     page_tokens: int = 16
     admission: str = "traffic"
     pipeline_depth: int = 1      # 2 = double-buffered migration windows
+    transport: object = None     # relocation data plane ("host"/"device")
     seed: int = 0
 
     def __post_init__(self):
@@ -354,7 +381,8 @@ class ServingSim:
                           asynchronous=True,
                           pipeline_depth=self.pipeline_depth),
             heartbeat_timeout=self.heartbeat_timeout,
-            page_tokens=self.page_tokens, admission=self.admission)
+            page_tokens=self.page_tokens, admission=self.admission,
+            transport=self.transport)
         if not self.speeds:
             self.speeds = (1.0,) * self.n_replicas
         self.rng = np.random.default_rng(self.seed)

@@ -57,9 +57,16 @@ class TrafficWorkload:
 
     def __init__(self, seqs: DistIdMap, kv: DistIdMap | None = None, *,
                  cost_model: TokenCostModel | None = None, ema: float = 0.5,
-                 min_keep: int = 1):
+                 min_keep: int = 1, transport=None):
         self.seqs = seqs
         self.kv = kv
+        # relocation data plane for the migration windows; None inherits
+        # the attached balancer's GLBConfig(transport=...).  "device"
+        # ships SeqKV pages through the jitted all_to_all — device
+        # buffers never bounce through host memory
+        from ..core.transport import make_transport
+        self.transport = None if transport is None \
+            else make_transport(transport)
         # retirement runs concurrently with async-window extraction
         seqs.tolerate_missing_keys = True
         if kv is not None:
@@ -158,7 +165,7 @@ class TrafficWorkload:
                 budget -= per_page * pg
                 moved_traffic += per_page * pg
                 moved_pages += pg
-        mm = CollectiveMoveManager(group)
+        mm = CollectiveMoveManager(group, transport=self.transport)
         n_moved = 0
         for src, mapping in assign.items():
             if not mapping:

@@ -1,0 +1,153 @@
+"""Dedicated coverage for ``core/teamed.py`` (ISSUE 5 satellite):
+``broadcast_from``, ``allgather1``, and the host ``team_reduce`` vs the
+device ``spmd_team_reduce`` equivalence on a 1-device mesh (the repo's
+``jax.vmap(axis_name=...)`` deployment-faithful emulation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (DistArray, LongRange, PlaceGroup, Reducer,
+                        allgather1, local_reduce, spmd_allgather1,
+                        spmd_team_reduce, team_reduce)
+from repro.core.teamed import broadcast_from
+
+
+def make_col(n_places=4, n=40, width=3, seed=0):
+    g = PlaceGroup(n_places)
+    col = DistArray(g, track=True)
+    rows = np.random.default_rng(seed).normal(size=(n, width))
+    for p, r in enumerate(LongRange(0, n).split(n_places)):
+        if r.size:
+            col.add_chunk(p, r, rows[r.start:r.end])
+    return g, col, rows
+
+
+class SumReducer:
+    """Additive monoid — the psum fast path on device."""
+
+    additive = True
+
+    def new_reducer(self):
+        return np.zeros(3)
+
+    def reduce(self, state, rows):
+        return state + np.asarray(rows).sum(axis=0)
+
+    def merge(self, a, b):
+        return a + b
+
+
+class MaxCount:
+    """Non-additive monoid: (max over rows, row count) — exercises the
+    all_gather + unrolled-merge path."""
+
+    additive = False
+
+    def new_reducer(self):
+        return (np.full(3, -np.inf), np.zeros((), np.int32))
+
+    def reduce(self, state, rows):
+        m, c = state
+        rows = np.asarray(rows)
+        return (np.maximum(m, rows.max(axis=0)),
+                c + np.int32(rows.shape[0]))
+
+    def merge(self, a, b):
+        return (np.maximum(a[0], b[0]), a[1] + b[1])
+
+
+class TestAllgather1:
+    def test_returns_full_vector(self):
+        g = PlaceGroup(4)
+        out = allgather1(g, [1.0, 2.0, 3.0, 4.0])
+        assert out.dtype == np.float64
+        assert np.array_equal(out, [1.0, 2.0, 3.0, 4.0])
+
+    def test_requires_one_value_per_place(self):
+        with pytest.raises(ValueError):
+            allgather1(PlaceGroup(3), [1.0, 2.0])
+
+    def test_spmd_allgather1_matches_host(self):
+        g = PlaceGroup(4)
+        vals = np.asarray([3.0, 1.0, 4.0, 1.5])
+        host = allgather1(g, vals)
+        dev = jax.vmap(lambda x: spmd_allgather1(x, "p"), axis_name="p")(
+            jnp.asarray(vals))
+        # every shard receives the identical full vector
+        for i in range(4):
+            assert np.allclose(np.asarray(dev[i]), host)
+
+
+class TestBroadcastFrom:
+    def test_every_non_owner_sink_receives_a_copy(self):
+        g = PlaceGroup(4)
+        value = np.arange(5, dtype=np.float64)
+        got: dict[int, np.ndarray] = {}
+        sinks = {p: (lambda v, p=p: got.__setitem__(p, v))
+                 for p in g.members}
+        broadcast_from(g, owner=1, value=value, sinks=sinks)
+        assert sorted(got) == [0, 2, 3]   # owner does not self-deliver
+        for p, v in got.items():
+            assert np.array_equal(v, value)
+            assert v is not value          # a copy, not the owner's buffer
+            v[0] = -1.0                    # receiver mutation stays local
+        assert value[0] == 0.0
+
+    def test_subgroup_broadcast(self):
+        g = PlaceGroup(4).subgroup([0, 2])
+        got = {}
+        sinks = {p: (lambda v, p=p: got.__setitem__(p, v))
+                 for p in (0, 2)}
+        broadcast_from(g, owner=0, value=np.ones(2), sinks=sinks)
+        assert list(got) == [2]
+
+
+class TestTeamReduceEquivalence:
+    """Host ``team_reduce`` == device ``spmd_team_reduce`` on a 1-device
+    mesh: per-place local states ride a ``vmap`` axis, exactly how
+    ``run_device_steal`` emulates its mesh."""
+
+    def _stacked_local_states(self, col, g, reducer):
+        states = [local_reduce(col, p, reducer) for p in g.members]
+        return jax.tree_util.tree_map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *states)
+
+    def test_additive_psum_path(self):
+        g, col, rows = make_col()
+        host = team_reduce(col, SumReducer())
+        assert np.allclose(host, rows.sum(axis=0))
+        stacked = self._stacked_local_states(col, g, SumReducer())
+        dev = jax.vmap(
+            lambda s: spmd_team_reduce(s, SumReducer(), "p"),
+            axis_name="p")(stacked)
+        for i in range(g.size()):   # allreduce: every shard holds it
+            assert np.allclose(np.asarray(dev[i]), host)
+
+    def test_general_monoid_allgather_path(self):
+        g, col, rows = make_col(seed=7)
+        host = team_reduce(col, MaxCount())
+        assert np.allclose(host[0], rows.max(axis=0))
+        assert int(host[1]) == len(rows)
+        stacked = self._stacked_local_states(col, g, MaxCount())
+        dev = jax.vmap(
+            lambda s: spmd_team_reduce(s, MaxCount(), "p"),
+            axis_name="p")(stacked)
+        for i in range(g.size()):
+            assert np.allclose(np.asarray(dev[0][i]), host[0])
+            assert int(dev[1][i]) == int(host[1])
+
+    def test_team_reduce_records_comm(self):
+        g, col, _ = make_col()
+        before = col.comm.syncs
+        team_reduce(col, SumReducer())
+        assert col.comm.syncs == before + 1
+        assert col.comm.bytes_moved > 0
+
+    def test_local_reduce_empty_place(self):
+        g = PlaceGroup(3)
+        col = DistArray(g, track=False)
+        col.add_chunk(0, LongRange(0, 4), np.ones((4, 3)))
+        # place 2 holds nothing: identity state
+        out = local_reduce(col, 2, SumReducer())
+        assert np.array_equal(out, np.zeros(3))
