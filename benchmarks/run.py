@@ -393,7 +393,121 @@ def bench_serving(only=None, smoke=False):
             f"survivors={len(d.group.members)}")
 
 
-def bench_relocation(only=None, smoke=False):
+# ---------------------------------------------------------------------------
+# Multi-process relocation (ISSUE 6): the same windows, across OS
+# processes.  Module-level workers — the spawn launcher pickles them by
+# reference.
+# ---------------------------------------------------------------------------
+def _dist_scenario(g, transport, entries, width):
+    """Serving-shaped SPMD window scenario over 8 places: a hot-shard
+    DistArray plus two DistIdMaps carrying a KV-like pytree and pickled
+    metadata (every wire kind the serving tier ships).  Identical on
+    every rank; handles are only populated for local places."""
+    from repro.core import (CollectiveMoveManager, DistArray, DistIdMap,
+                            LongRange)
+
+    col = DistArray(g, track=True)
+    rows = np.arange(entries * width, dtype=np.float64).reshape(entries,
+                                                                width)
+    if g.is_local(0):
+        col.add_chunk(0, LongRange(0, entries), rows)
+    seqs = DistIdMap(g)
+    kv = DistIdMap(g)
+    n = g.size()
+    for k in range(4 * n):
+        p = k % n
+        if g.is_local(p):
+            seqs.put(p, k, ("seq", k, [k, k + 1]))      # pickle wire
+            kv.put(p, k, {"pg": np.full((16, 4), float(k), np.float32),
+                          "meta": np.array([k, p], np.int32)})  # tree wire
+    mm = CollectiveMoveManager(g, transport=transport)
+    # window 1: spread the hot shard (range moves registered on every
+    # rank — each rank relocates the pieces it holds) + key-rule moves
+    share = entries // 4
+    for i, dest in enumerate((2, 4, 6)):
+        col.move_range_at_sync(LongRange(i * share, (i + 1) * share),
+                               dest, mm)
+    for p in range(n):
+        seqs.move_at_sync(p, lambda k: (int(k) * 5) % n, mm)
+        kv.move_at_sync(p, lambda k: (int(k) * 5) % n, mm)
+    mm.sync_async((col, seqs, kv), depth=2)
+    # window 2 (chained, double-buffered): count moves off the loaded
+    # places + a range move back onto the origin
+    col.move_at_sync_count(2, share // 2, 1, mm)
+    col.move_at_sync_count(4, share // 2, 5, mm)
+    col.move_range_at_sync(LongRange(3 * share, entries), 7, mm)
+    for p in range(n):
+        seqs.move_at_sync(p, lambda k: (int(k) // 2) % n, mm)
+        kv.move_at_sync(p, lambda k: (int(k) // 2) % n, mm)
+    mm.sync_async((col, seqs, kv), depth=2)
+    mm.drain()
+    return col, seqs, kv, mm
+
+
+def _dist_snapshot(g, col, seqs, kv):
+    """Byte-exact local state per place (picklable, order-canonical)."""
+    import pickle
+
+    out = {}
+    for p in g.local_places():
+        h = col.handle(p)
+        out[p] = {
+            "ranges": [(r.start, r.end) for r in h.ranges()],
+            "rows": b"".join(h.chunks[r].tobytes() for r in h.ranges()),
+            "seqs": [(k, pickle.dumps(seqs.get(p, k)))
+                     for k in sorted(seqs.keys(p))],
+            "kv": [(k, kv.get(p, k)["pg"].tobytes(),
+                    kv.get(p, k)["meta"].tobytes())
+                   for k in sorted(kv.keys(p))],
+        }
+    return out
+
+
+def _dist_worker(backend, entries, width):
+    from repro.core import DistributedTransport, ProcessPlaceGroup
+
+    g = ProcessPlaceGroup(8, backend)
+    t0 = time.perf_counter()
+    col, seqs, kv, mm = _dist_scenario(g, DistributedTransport(),
+                                       entries, width)
+    us = (time.perf_counter() - t0) * 1e6
+    snap: dict = {}
+    for part in backend.allgather(_dist_snapshot(g, col, seqs, kv)):
+        snap.update(part)
+    lt = mm.transport.lifetime
+    return {"us": us, "snap": snap,
+            "counts": mm.last_counts_matrix.tolist(),
+            "wire_rows": lt.rows, "wire_bytes": lt.row_bytes,
+            "exchanges": lt.exchanges}
+
+
+def bench_reloc_distributed(processes, smoke=False):
+    """``reloc_transport --processes N``: the §5.3 exchange across OS
+    processes, asserted bit-identical to the in-process HostTransport
+    reference (acceptance: one data plane, any process topology)."""
+    from repro.core import HostTransport, PlaceGroup, run_multiprocess
+
+    entries, width = (400, 8) if smoke else (1600, 8)
+    results = run_multiprocess(_dist_worker, processes, entries, width)
+    g = PlaceGroup(8)
+    col, seqs, kv, mm = _dist_scenario(g, HostTransport(), entries, width)
+    ref_snap = _dist_snapshot(g, col, seqs, kv)
+    for r, res in enumerate(results):
+        assert res["snap"] == ref_snap, \
+            f"rank {r} final state diverged from HostTransport"
+        assert res["counts"] == mm.last_counts_matrix.tolist(), \
+            f"rank {r} counts matrix diverged"
+    us = max(res["us"] for res in results)
+    wire_rows = sum(res["wire_rows"] for res in results)
+    wire_bytes = sum(res["wire_bytes"] for res in results)
+    exchanges = max(res["exchanges"] for res in results)
+    row("reloc_transport_dist", us,
+        f"processes={processes};entries={entries};wire_rows={wire_rows};"
+        f"wire_bytes={wire_bytes};exchanges={exchanges};"
+        f"bitwise_parity=1;serving_shapes=1")
+
+
+def bench_relocation(only=None, smoke=False, processes=1):
     from repro.core import (CollectiveMoveManager, DistArray, DistIdMap,
                             LongRange, PlaceGroup)
     if only:
@@ -571,6 +685,8 @@ def bench_relocation(only=None, smoke=False):
             f"host_us={host_us:.0f};id_mode_us={id_us:.0f};"
             f"speedup_x={speedup:.2f};stolen={res_d['stolen']};"
             f"row_bytes={width * 8};entries={entries};bitwise_parity=1")
+        if processes > 1:
+            bench_reloc_distributed(processes, smoke=smoke)
 
 
 def bench_kernels():
@@ -649,17 +765,18 @@ def roofline_table():
 
 
 GROUPS = {
-    "kmeans": lambda sels, smoke: bench_kmeans(),
-    "moldyn": lambda sels, smoke: bench_moldyn(),
-    "plham": lambda sels, smoke: bench_plham(),
-    "glb": lambda sels, smoke: bench_glb(only=sels or None, smoke=smoke),
-    "serving": lambda sels, smoke: bench_serving(only=sels or None,
-                                                 smoke=smoke),
-    "reloc": lambda sels, smoke: bench_relocation(only=sels or None,
-                                                  smoke=smoke),
-    "kernel": lambda sels, smoke: bench_kernels(),
-    "train": lambda sels, smoke: bench_train_smoke(),
-    "roofline": lambda sels, smoke: roofline_table(),
+    "kmeans": lambda sels, smoke, **kw: bench_kmeans(),
+    "moldyn": lambda sels, smoke, **kw: bench_moldyn(),
+    "plham": lambda sels, smoke, **kw: bench_plham(),
+    "glb": lambda sels, smoke, **kw: bench_glb(only=sels or None,
+                                               smoke=smoke),
+    "serving": lambda sels, smoke, **kw: bench_serving(only=sels or None,
+                                                       smoke=smoke),
+    "reloc": lambda sels, smoke, **kw: bench_relocation(
+        only=sels or None, smoke=smoke, processes=kw.get("processes", 1)),
+    "kernel": lambda sels, smoke, **kw: bench_kernels(),
+    "train": lambda sels, smoke, **kw: bench_train_smoke(),
+    "roofline": lambda sels, smoke, **kw: roofline_table(),
 }
 
 
@@ -668,7 +785,10 @@ def main(argv=None) -> None:
     a selector is a group prefix (``glb``) or a row name
     (``glb_disturbed``, ``glb_steal_latency``).  ``--smoke`` shrinks the
     scenarios (CI wiring check; currently honored by ``serving_*``,
-    ``glb_device_steal`` and ``reloc_*``).  ``--json out.json`` also
+    ``glb_device_steal`` and ``reloc_*``).  ``--processes N`` additionally
+    runs the ``reloc_transport`` exchange across N OS processes
+    (``DistributedTransport``) and asserts parity with the in-process
+    run.  ``--json out.json`` also
     dumps the rows machine-readably: the aggregate file plus one
     ``BENCH_<row>.json`` per row next to it (the perf trajectory
     diffable across PRs)."""
@@ -676,6 +796,15 @@ def main(argv=None) -> None:
     sels = list(sys.argv[1:] if argv is None else argv)
     smoke = "--smoke" in sels
     sels = [s for s in sels if s != "--smoke"]
+    processes = 1
+    if "--processes" in sels:
+        i = sels.index("--processes")
+        if i + 1 >= len(sels) or not sels[i + 1].isdigit():
+            print("error: --processes needs a count (e.g. --processes 2)",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        processes = int(sels[i + 1])
+        del sels[i:i + 2]
     json_path = None
     if "--json" in sels:
         i = sels.index("--json")
@@ -688,7 +817,7 @@ def main(argv=None) -> None:
     print("name,us_per_call,derived")
     if not sels:
         for fn in GROUPS.values():
-            fn([], smoke)
+            fn([], smoke, processes=processes)
         if json_path is not None:
             dump_json(json_path)
         return
@@ -697,7 +826,7 @@ def main(argv=None) -> None:
         mine = [s for s in sels if s == group or s.startswith(group + "_")]
         if mine:
             matched.update(mine)
-            fn(mine, smoke)
+            fn(mine, smoke, processes=processes)
     unknown = [s for s in sels if s not in matched]
     if unknown:
         print(f"error: unknown selector(s) {unknown}; "

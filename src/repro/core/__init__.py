@@ -16,6 +16,14 @@ from .collections import (
     DistMultiMap,
     PlaceGroup,
 )
+from .distributed import (
+    DistributedTransport,
+    LocalBackend,
+    PipeBackend,
+    ProcessPlaceGroup,
+    current_backend,
+    run_multiprocess,
+)
 from .distribution import DistributionDelta, LongRange, RangeDistribution
 from .glb import (
     ClusterSim,
@@ -66,6 +74,8 @@ __all__ = [
     "BalanceDecision", "LevelExtremes", "LoadBalancer", "Proportional",
     "CachableArray", "CachableChunkedList", "DistArray", "DistBag",
     "DistIdMap", "DistMap", "DistMultiMap", "PlaceGroup",
+    "DistributedTransport", "LocalBackend", "PipeBackend",
+    "ProcessPlaceGroup", "current_backend", "run_multiprocess",
     "DistributionDelta", "LongRange", "RangeDistribution",
     "ClusterSim", "DistArrayWorkload", "GLBConfig", "GLBStats",
     "GlobalLoadBalancer", "ListWorkload", "MultiCollectionWorkload",

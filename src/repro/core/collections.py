@@ -40,11 +40,26 @@ __all__ = [
 _GLOBAL_ID_LOCK = threading.Lock()
 _NEXT_GLOBAL_ID = [0]
 
+# global_id → live collection, for transports that address collections
+# by id across OS processes (DistributedTransport).  Weak so a dropped
+# collection is not pinned by its wire address.
+import weakref
+
+_COLLECTIONS = weakref.WeakValueDictionary()
+
 
 def _fresh_global_id() -> int:
     with _GLOBAL_ID_LOCK:
         _NEXT_GLOBAL_ID[0] += 1
         return _NEXT_GLOBAL_ID[0]
+
+
+def lookup_collection(global_id: int):
+    """The live collection registered under ``global_id`` in this
+    process, or ``None``.  SPMD programs create collections in the same
+    order on every process, so ids agree rank-to-rank — this is the
+    receive-side address resolution of ``DistributedTransport``."""
+    return _COLLECTIONS.get(int(global_id))
 
 
 def unique_leaves_nbytes(leaves, seen: set) -> int:
@@ -283,17 +298,56 @@ class PlaceGroup:
         if len(self.members) != self.n_places:
             raise ValueError("members length must equal n_places")
 
+    #: single-process groups: every place is local and rank 0 owns all.
+    #: ``ProcessPlaceGroup`` (``core/distributed.py``) overrides these so
+    #: the relocation engine can ask *where* a place lives without caring
+    #: whether the group spans OS processes.
+    process_backed = False
+
     @staticmethod
     def world(n_places: int, **kw) -> "PlaceGroup":
         return PlaceGroup(n_places, **kw)
 
     def subgroup(self, members: Sequence[int]) -> "PlaceGroup":
-        """Paper §3.4: teamed ops over a subset of the world."""
-        return PlaceGroup(len(members), mesh=self.mesh, axis=self.axis,
+        """Paper §3.4: teamed ops over a subset of the world.
+
+        A *proper* subset drops the parent's ``mesh``/``axis`` binding:
+        the named axis spans every parent member, so device collectives
+        issued "for the subgroup" would actually run over the full axis
+        — silently wrong results, not an error.  Sub-axis teams need
+        their own mesh; until one is bound, the subgroup is host-only."""
+        members = tuple(members)
+        full = members == self.members
+        return PlaceGroup(len(members),
+                          mesh=self.mesh if full else None,
+                          axis=self.axis if full else None,
                           members=members)
 
     def size(self) -> int:
         return self.n_places
+
+    # -- process topology (trivial for in-process groups) -----------------
+    def rank_of(self, place: int) -> int:
+        """OS-process rank owning ``place`` (always 0 in-process)."""
+        return 0
+
+    def is_local(self, place: int) -> bool:
+        """Does ``place``'s handle live in this process?"""
+        return True
+
+    def local_places(self) -> tuple:
+        """The members whose handles live in this process."""
+        return self.members
+
+    def exchange_counts(self, counts: np.ndarray) -> np.ndarray:
+        """Phase-1 Alltoall of the place×place byte-count matrix: the
+        in-process group already sees the global matrix."""
+        return counts
+
+    def exchange_range_claims(self, claims: Sequence[int]) -> list[int]:
+        """Per-range-move locally-covered entry counts, summed across
+        processes (identity in-process)."""
+        return [int(c) for c in claims]
 
     def __contains__(self, place: int) -> bool:
         return place in self.members
@@ -336,6 +390,7 @@ class DistCollection:
     def __init__(self, group: PlaceGroup):
         self.group = group
         self.global_id = _fresh_global_id()
+        _COLLECTIONS[self.global_id] = self
         self._handles: dict[int, Any] = {}
         self._lock = threading.RLock()
         self.comm = _CommStats()
@@ -394,9 +449,25 @@ class _ChunkHandle:
                 raise ValueError(f"chunk {r} overlaps existing {existing}")
         self.chunks[r] = np.asarray(arr)
 
+    def intersections(self, r: LongRange) -> list[LongRange]:
+        """Locally-held sub-ranges of ``r``, sorted by start."""
+        inters = [cr.intersection(r) for cr in self.chunks]
+        return sorted((i for i in inters if i is not None),
+                      key=lambda i: i.start)
+
     def extract(self, r: LongRange) -> np.ndarray:
         """Remove and return rows covering ``r`` (splits chunks as needed,
-        paper §5.2: 'existing chunks will be split as necessary')."""
+        paper §5.2: 'existing chunks will be split as necessary').
+
+        Coverage is validated *before* any chunk is popped: a partial
+        hold raises with the handle untouched, so a failed relocation
+        window never destroys the entries it could not move."""
+        inters = self.intersections(r)
+        if not inters:
+            raise KeyError(f"range {r} not held locally")
+        covered = sum(i.size for i in inters)
+        if covered != r.size or inters[0].start != r.start:
+            raise KeyError(f"range {r} only partially held locally")
         taken = []
         for cr in list(self.chunks):
             inter = cr.intersection(r)
@@ -410,13 +481,7 @@ class _ChunkHandle:
                 self.chunks[LongRange(cr.start, inter.start)] = arr[:lo]
             if hi < cr.size:
                 self.chunks[LongRange(inter.end, cr.end)] = arr[hi:]
-        if not taken:
-            raise KeyError(f"range {r} not held locally")
-        taken.sort()
-        starts = [s for s, _ in taken]
-        covered = sum(len(a) for _, a in taken)
-        if covered != r.size or starts[0] != r.start:
-            raise KeyError(f"range {r} only partially held locally")
+        taken.sort(key=lambda t: t[0])
         return np.concatenate([a for _, a in taken], axis=0)
 
 
@@ -551,8 +616,17 @@ class DistArray(DistCollection):
         with self._lock:
             old = self._dist
             new = RangeDistribution()
-            for p in self.group.members:
-                for r in self.ranges(p):
+            local = {p: self.ranges(p) for p in self.group.local_places()}
+            if self.group.process_backed:
+                # teamed: every rank contributes its local ownership and
+                # receives the merged table (collective — all ranks must
+                # reconcile the same collections in the same order)
+                merged: dict = {}
+                for part in self.group.backend.allgather(local):
+                    merged.update(part)
+                local = merged
+            for p, ranges in local.items():
+                for r in ranges:
                     new.assign(r, p)
             # Delta accounting: ranges whose ownership changed since `old`.
             changed = 0
@@ -794,6 +868,12 @@ class DistMap(DistCollection):
 
     def _extract_keys(self, place: int, keys):
         h = self.handle(place)
+        if not self.tolerate_missing_keys:
+            # validate before popping: a missing key raises with the
+            # handle untouched, never with earlier keys already removed
+            for k in keys:
+                if k not in h:
+                    raise KeyError(k)
         out = []
         for k in keys:
             try:
@@ -802,8 +882,7 @@ class DistMap(DistCollection):
                 # removed between registration and extraction (e.g. a
                 # serving sequence retired while the async window's
                 # phase 1 ran) — nothing to relocate for this key
-                if not self.tolerate_missing_keys:
-                    raise
+                pass
         return out
 
     def _insert_payload(self, dest: int, payload) -> None:
@@ -870,8 +949,14 @@ class DistIdMap(DistMap):
     def update_dist(self) -> None:
         with self._lock:
             new = RangeDistribution()
-            for p in self.group.members:
-                for k in self.keys(p):
+            local = {p: self.keys(p) for p in self.group.local_places()}
+            if self.group.process_backed:
+                merged: dict = {}
+                for part in self.group.backend.allgather(local):
+                    merged.update(part)
+                local = merged
+            for p, keys in local.items():
+                for k in keys:
                     new.assign(LongRange(k, k + 1), p)
             self._dist = new
 

@@ -1,0 +1,573 @@
+"""Multi-process places: the relocation data plane leaves the process.
+
+Every other module in ``core/`` models places inside one OS process.
+This module supplies the three pieces that let the *same* APIs span
+processes, the way BCL hides MPI/SHMEM/GASNet-EX behind one
+container-facing backend seam:
+
+* **Process backends** — :class:`PipeBackend` gives a real N-process
+  exchange over ``multiprocessing.connection`` pipes (runs anywhere,
+  including CPU-only CI); :class:`LocalBackend` is the world-size-1
+  degenerate case so ``transport="distributed"`` also works in-process.
+  Every collective carries a sequence tag, so a rank that falls out of
+  program order fails loudly instead of decoding another window's
+  bytes.
+
+* **run_multiprocess** — a ``spawn``-based launcher: one worker
+  function runs SPMD on every rank, pre-wired pipes form the full mesh,
+  per-rank results (or tracebacks) come back to the caller.
+
+* **ProcessPlaceGroup / DistributedTransport** — a ``PlaceGroup``
+  whose places are block-partitioned across ranks, and the third
+  :class:`~repro.core.transport.RelocationTransport`: phase-1 counts
+  ride the backend as an allreduce, payload rows are encoded by the
+  *same* PR-5 row codecs (``encode_rows``/``decode_rows``) and cross
+  the process boundary through one alltoall per window.  Where a
+  multi-controller ``jax.distributed`` runtime is initialized, the row
+  payload can instead ride a device-mesh ``all_to_all``
+  (``device_wire="auto"``); the serialized pipe wire is the
+  CPU-CI-provable fallback and the default everywhere else.
+
+SPMD contract (mirrors the paper's teamed semantics): every rank runs
+the same program — creates collections in the same order (global ids
+are the wire addresses), registers the same *range* moves on every
+rank (each rank relocates the pieces it holds; coverage is validated
+globally), and may register src-explicit moves anywhere (only the rank
+owning ``src`` extracts).  ``sync()`` is collective.
+"""
+from __future__ import annotations
+
+import threading
+import traceback
+from typing import Any, Callable, Sequence
+
+import numpy as np
+
+from .collections import PlaceGroup, lookup_collection
+from .transport import TransportStats
+
+__all__ = [
+    "LocalBackend",
+    "PipeBackend",
+    "run_multiprocess",
+    "current_backend",
+    "ProcessPlaceGroup",
+    "DistributedTransport",
+]
+
+
+# ---------------------------------------------------------------------------
+# Process backends
+# ---------------------------------------------------------------------------
+class LocalBackend:
+    """World-size-1 backend: every collective is the identity.  Lets
+    ``transport="distributed"`` (and every process-aware code path) run
+    unchanged inside a single process."""
+
+    rank = 0
+    world_size = 1
+
+    def alltoall(self, objs: Sequence[Any]) -> list:
+        if len(objs) != 1:
+            raise ValueError("LocalBackend alltoall expects 1 entry")
+        return list(objs)
+
+    def allgather(self, obj: Any) -> list:
+        return [obj]
+
+    def allreduce_sum(self, arr) -> np.ndarray:
+        return np.asarray(arr)
+
+    def broadcast(self, obj: Any, root: int = 0) -> Any:
+        return obj
+
+    def barrier(self) -> None:
+        pass
+
+
+class PipeBackend:
+    """Full-mesh ``multiprocessing.connection`` backend.
+
+    One duplex pipe per rank pair; each pairwise handshake is ordered
+    (the lower rank sends first, the higher recvs first) so a large
+    message can never deadlock two ranks that both block in ``send``.
+    Every message carries ``(tag, payload)`` where ``tag`` is this
+    backend's collective sequence number — ranks that drift out of
+    program order (two threads racing collectives, a skipped sync)
+    raise instead of silently decoding the wrong window.
+    """
+
+    def __init__(self, rank: int, world_size: int, conns: dict):
+        self.rank = int(rank)
+        self.world_size = int(world_size)
+        self._conns = conns              # peer rank -> Connection
+        self._tag = 0
+        self._lock = threading.Lock()    # collectives serialize in-process
+
+    # -- pairwise ordered exchange ---------------------------------------
+    def _swap(self, peer: int, obj: Any, tag: int) -> Any:
+        c = self._conns[peer]
+        if self.rank < peer:
+            c.send((tag, obj))
+            rtag, got = c.recv()
+        else:
+            rtag, got = c.recv()
+            c.send((tag, obj))
+        if rtag != tag:
+            raise RuntimeError(
+                f"rank {self.rank} got collective #{rtag} from rank "
+                f"{peer} while running #{tag} — ranks out of program "
+                "order (collectives must be issued identically on "
+                "every rank)")
+        return got
+
+    def alltoall(self, objs: Sequence[Any]) -> list:
+        if len(objs) != self.world_size:
+            raise ValueError(
+                f"alltoall needs {self.world_size} entries, got {len(objs)}")
+        with self._lock:
+            tag = self._tag
+            self._tag += 1
+            out = [None] * self.world_size
+            out[self.rank] = objs[self.rank]
+            for peer in range(self.world_size):
+                if peer != self.rank:
+                    out[peer] = self._swap(peer, objs[peer], tag)
+            return out
+
+    def allgather(self, obj: Any) -> list:
+        return self.alltoall([obj] * self.world_size)
+
+    def allreduce_sum(self, arr) -> np.ndarray:
+        arr = np.asarray(arr)
+        out = np.zeros_like(arr)
+        for part in self.allgather(arr):
+            out = out + np.asarray(part)
+        return out
+
+    def broadcast(self, obj: Any, root: int = 0) -> Any:
+        # ride the same tagged alltoall so broadcasts stay in program
+        # order with every other collective (N small control messages)
+        got = self.allgather(obj if self.rank == root else None)
+        return got[root]
+
+    def barrier(self) -> None:
+        self.allgather(None)
+
+
+_CURRENT_BACKEND: list = [None]
+
+
+def current_backend():
+    """The backend this process was launched with (see
+    :func:`run_multiprocess`), or ``None`` outside a launched worker."""
+    return _CURRENT_BACKEND[0]
+
+
+def _set_current_backend(backend) -> None:
+    _CURRENT_BACKEND[0] = backend
+
+
+# ---------------------------------------------------------------------------
+# The launcher
+# ---------------------------------------------------------------------------
+def _worker_main(fn, rank, world_size, conns, result_conn, args, kwargs):
+    """Spawn entry point (module-level so it pickles under spawn)."""
+    backend = PipeBackend(rank, world_size, conns)
+    _set_current_backend(backend)
+    try:
+        result = fn(backend, *args, **kwargs)
+        payload = ("ok", result)
+    except BaseException:
+        payload = ("err", traceback.format_exc())
+    try:
+        result_conn.send(payload)
+    except Exception:
+        # unpicklable result: report that instead of hanging the parent
+        result_conn.send(("err", f"rank {rank}: result not picklable"))
+    finally:
+        result_conn.close()
+
+
+def run_multiprocess(fn: Callable, nprocs: int, *args,
+                     timeout: float = 180.0, **kwargs) -> list:
+    """Run ``fn(backend, *args, **kwargs)`` SPMD on ``nprocs`` fresh OS
+    processes (``spawn`` — no inherited JAX state) wired into a full
+    pipe mesh; returns the per-rank results in rank order.
+
+    ``fn`` must be a module-level function (spawn pickles it by
+    reference) and arguments/results must be picklable.  From a script,
+    call this under ``if __name__ == "__main__":`` — spawn re-imports
+    the main module in every child, the standard multiprocessing
+    contract.  Any rank's exception re-raises here with its traceback;
+    ``nprocs == 1`` runs ``fn`` inline on a :class:`LocalBackend` (no
+    spawn, no pickling)."""
+    if nprocs < 1:
+        raise ValueError(f"nprocs must be >= 1, got {nprocs}")
+    if nprocs == 1:
+        backend = LocalBackend()
+        prev = current_backend()
+        _set_current_backend(backend)
+        try:
+            return [fn(backend, *args, **kwargs)]
+        finally:
+            _set_current_backend(prev)
+
+    import multiprocessing as mp
+
+    ctx = mp.get_context("spawn")
+    # full mesh: one duplex pipe per rank pair
+    ends: dict[int, dict[int, Any]] = {r: {} for r in range(nprocs)}
+    for i in range(nprocs):
+        for j in range(i + 1, nprocs):
+            ci, cj = ctx.Pipe(duplex=True)
+            ends[i][j] = ci
+            ends[j][i] = cj
+    procs, result_conns = [], []
+    for r in range(nprocs):
+        parent_end, child_end = ctx.Pipe(duplex=False)
+        p = ctx.Process(target=_worker_main,
+                        args=(fn, r, nprocs, ends[r], child_end,
+                              args, kwargs),
+                        daemon=True)
+        p.start()
+        child_end.close()
+        for c in ends[r].values():
+            c.close()   # parent's copies; the children own them now
+        procs.append(p)
+        result_conns.append(parent_end)
+
+    results: list = [None] * nprocs
+    errors: list[str] = []
+    try:
+        for r, conn in enumerate(result_conns):
+            if not conn.poll(timeout):
+                errors.append(f"rank {r}: no result within {timeout}s")
+                continue
+            try:
+                status, value = conn.recv()
+            except EOFError:
+                errors.append(
+                    f"rank {r}: died without reporting "
+                    f"(exit code {procs[r].exitcode}); if launching from "
+                    f"a script, run_multiprocess must be called under "
+                    f"`if __name__ == \"__main__\":` (spawn re-imports "
+                    f"the main module in every child)")
+                continue
+            if status == "ok":
+                results[r] = value
+            else:
+                errors.append(f"rank {r} failed:\n{value}")
+    finally:
+        for p in procs:
+            p.join(timeout=10.0)
+            if p.is_alive():
+                p.terminate()
+                p.join()
+        for conn in result_conns:
+            conn.close()
+    if errors:
+        raise RuntimeError("run_multiprocess: " + "\n".join(errors))
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Process-backed place groups
+# ---------------------------------------------------------------------------
+class ProcessPlaceGroup(PlaceGroup):
+    """A :class:`PlaceGroup` whose places are partitioned across OS
+    processes: contiguous blocks of members per rank (rank 0 gets the
+    first ``ceil(n/W)`` places, and so on), or an explicit
+    ``place_ranks`` mapping.  The teamed-op API is unchanged — the
+    relocation engine and ``teamed.py`` consult :meth:`rank_of` /
+    :meth:`local_places` and route cross-rank traffic through the
+    process backend."""
+
+    def __init__(self, n_places: int, backend=None, *,
+                 place_ranks: dict[int, int] | None = None,
+                 mesh=None, axis: str | None = None,
+                 members: Sequence[int] | None = None):
+        super().__init__(n_places, mesh=mesh, axis=axis, members=members)
+        if backend is None:
+            backend = current_backend() or LocalBackend()
+        self.backend = backend
+        W = backend.world_size
+        if place_ranks is None:
+            base, rem = divmod(self.n_places, W)
+            place_ranks = {}
+            i = 0
+            for r in range(W):
+                take = base + (1 if r < rem else 0)
+                for p in self.members[i:i + take]:
+                    place_ranks[p] = r
+                i += take
+        self.place_ranks = {int(p): int(r) for p, r in place_ranks.items()}
+        for p in self.members:
+            r = self.place_ranks.get(p)
+            if r is None or not (0 <= r < W):
+                raise ValueError(f"place {p} has no valid rank (world {W})")
+
+    @property
+    def process_backed(self) -> bool:  # type: ignore[override]
+        return self.backend.world_size > 1
+
+    def rank_of(self, place: int) -> int:
+        return self.place_ranks[place]
+
+    def is_local(self, place: int) -> bool:
+        return self.place_ranks[place] == self.backend.rank
+
+    def local_places(self) -> tuple:
+        me = self.backend.rank
+        return tuple(p for p in self.members if self.place_ranks[p] == me)
+
+    def exchange_counts(self, counts: np.ndarray) -> np.ndarray:
+        if not self.process_backed:
+            return counts
+        return self.backend.allreduce_sum(counts)
+
+    def exchange_range_claims(self, claims: Sequence[int]) -> list[int]:
+        claims = [int(c) for c in claims]
+        if not self.process_backed:
+            return claims
+        gathered = self.backend.allgather(claims)
+        if len({len(c) for c in gathered}) > 1:
+            raise RuntimeError(
+                "range moves must be registered on every rank, in the "
+                "same order (the SPMD window contract): got per-rank "
+                f"range-move counts {[len(c) for c in gathered]}")
+        return [int(sum(c[i] for c in gathered))
+                for i in range(len(claims))]
+
+    def subgroup(self, members: Sequence[int]) -> "ProcessPlaceGroup":
+        members = tuple(members)
+        full = members == self.members
+        return ProcessPlaceGroup(
+            len(members), self.backend,
+            place_ranks={p: self.place_ranks[p] for p in members},
+            mesh=self.mesh if full else None,
+            axis=self.axis if full else None,
+            members=members)
+
+    def __repr__(self) -> str:
+        return (f"ProcessPlaceGroup({list(self.members)}, "
+                f"rank={self.backend.rank}/{self.backend.world_size})")
+
+
+# ---------------------------------------------------------------------------
+# The transport
+# ---------------------------------------------------------------------------
+class DistributedTransport:
+    """The §5.3 Alltoallv across OS processes.
+
+    Payload rows are encoded by the owning collection's row codec — the
+    exact wire format :class:`~repro.core.transport.DeviceTransport`
+    ships on-device — then cross the process boundary through one
+    backend ``alltoall`` per window.  Wire entries are addressed by
+    collection ``global_id`` (equal across ranks for SPMD programs);
+    rank-local payloads (including self-moves) pass through by
+    reference, exactly like :class:`HostTransport`, so a world-size-1
+    run degrades to the host loopback.
+
+    ``device_wire="auto"`` (default): when a multi-controller
+    ``jax.distributed`` runtime is initialized and one addressable
+    device per process is available, chunk-matrix rows ride a
+    process-spanning device-mesh ``all_to_all`` instead of the pickled
+    pipe — manifests and control stay on the backend.  CPU-only CI
+    never takes this path; it is exercised only under a real
+    ``jax.distributed.initialize`` launch.  ``device_wire="off"``
+    forces the serialized wire.
+    """
+
+    device_plane = False
+
+    def __init__(self, backend=None, *, device_wire: str = "auto"):
+        if device_wire not in ("auto", "off"):
+            raise ValueError(f"device_wire must be 'auto' or 'off', "
+                             f"got {device_wire!r}")
+        self._backend = backend
+        self.device_wire = device_wire
+        self.lifetime = TransportStats(kind="distributed")
+        self._lifetime_lock = threading.Lock()
+
+    def _resolve_backend(self, group):
+        b = getattr(group, "backend", None)
+        if b is not None:
+            if self._backend is not None and self._backend is not b:
+                raise ValueError(
+                    "transport and group are bound to different process "
+                    "backends")
+            return b
+        return self._backend or current_backend() or LocalBackend()
+
+    # -- optional jax.distributed device wire -----------------------------
+    def _device_wire_ready(self, backend) -> bool:
+        if self.device_wire == "off" or backend.world_size <= 1:
+            return False
+        try:
+            import jax
+
+            dist = getattr(jax, "distributed", None)
+            if dist is None or not getattr(dist, "is_initialized",
+                                           lambda: False)():
+                return False
+            return (jax.process_count() == backend.world_size
+                    and jax.device_count() >= backend.world_size
+                    and len(jax.local_devices()) >= 1)
+        except Exception:
+            return False
+
+    def _exchange_rows_device(self, backend, outgoing: list) -> list | None:
+        """Ship the wire entries' row bytes over a process-spanning
+        device-mesh ``all_to_all`` (one device per process); manifests
+        and shapes ride the control backend.  Returns the incoming
+        entry lists (same layout as the serialized wire) or ``None`` to
+        fall back.  Only taken under a real multi-controller
+        ``jax.distributed`` launch — CPU-only CI always falls back."""
+        try:
+            import jax
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import (Mesh, NamedSharding,
+                                      PartitionSpec as P)
+
+            W = backend.world_size
+            # per-dest concatenated byte matrix + control entries that
+            # say how to split it back into payload rows
+            mats, ctrl = [], []
+            for dr in range(W):
+                blocks, centries = [], []
+                for gid, src, dest, rows, manifest in outgoing[dr]:
+                    if isinstance(rows, np.ndarray):
+                        blocks.append(rows)
+                        centries.append((gid, src, dest, manifest,
+                                         "mat", rows.shape))
+                    else:
+                        widths = [int(len(r)) for r in rows]
+                        wm = max(widths, default=0)
+                        m = np.zeros((len(rows), wm), np.uint8)
+                        for i, r in enumerate(rows):
+                            m[i, :widths[i]] = r
+                        blocks.append(m)
+                        centries.append((gid, src, dest, manifest,
+                                         "rows", widths))
+                mats.append(blocks)
+                ctrl.append(centries)
+            dims = [[(int(b.shape[0]), int(b.shape[1])) for b in blocks]
+                    for blocks in mats]
+            all_dims = backend.alltoall(dims)   # dims[me->dr] lands at dr
+            R = max((sum(r for r, _ in per) for per in dims), default=0)
+            C = max((c for per in dims for _, c in per), default=0)
+            # global padded extents (the collective is dense/static)
+            R = int(np.max(backend.allgather(R)))
+            C = int(np.max(backend.allgather(C)))
+            in_ctrl = backend.alltoall(ctrl)
+            if R == 0 or C == 0:
+                return [[(g, s, d, [] if k == "rows" else
+                          np.zeros((0, 0), np.uint8), mf)
+                         for g, s, d, mf, k, _ in in_ctrl[sr]]
+                        for sr in range(W)]
+            local = np.zeros((W, R, C), np.uint8)
+            for dr in range(W):
+                off = 0
+                for b in mats[dr]:
+                    local[dr, off:off + b.shape[0], :b.shape[1]] = b
+                    off += b.shape[0]
+            mesh = Mesh(np.asarray(jax.devices())[:W], ("proc",))
+            g = jax.make_array_from_single_device_arrays(
+                (W * W, R, C), NamedSharding(mesh, P("proc")),
+                [jax.device_put(local, jax.local_devices()[0])])
+            out = jax.jit(shard_map(
+                lambda x: jax.lax.all_to_all(x, "proc", 0, 0, tiled=True),
+                mesh=mesh, in_specs=P("proc"), out_specs=P("proc")))(g)
+            recv = np.asarray(out.addressable_shards[0].data)  # (W, R, C)
+            incoming = []
+            for sr in range(W):
+                entries, off = [], 0
+                for (gid, src, dest, manifest, kind, info), (m, c) in zip(
+                        in_ctrl[sr], all_dims[sr]):
+                    block = recv[sr, off:off + m, :c]
+                    off += m
+                    if kind == "mat":
+                        rows: Any = block
+                    else:
+                        rows = [block[i, :w] for i, w in enumerate(info)]
+                    entries.append((gid, src, dest, rows, manifest))
+                incoming.append(entries)
+            return incoming
+        except Exception:
+            return None   # fall back to the serialized pipe wire
+
+    # -- the exchange ------------------------------------------------------
+    def exchange(self, group, counts, payloads):
+        backend = self._resolve_backend(group)
+        W = backend.world_size
+        me = backend.rank
+        rank_of = getattr(group, "rank_of", lambda p: 0)
+        stats = TransportStats(kind="distributed")
+
+        delivered = []
+        outgoing: list[list] = [[] for _ in range(W)]
+        for col, src, dest, payload in payloads:
+            if rank_of(src) != me:
+                raise RuntimeError(
+                    f"phase 1 extracted a payload for place {src} owned "
+                    f"by rank {rank_of(src)} on rank {me}")
+            if src == dest:
+                stats.local += 1
+                delivered.append((col, src, dest, payload))
+                continue
+            stats.payloads += 1
+            dr = rank_of(dest)
+            if dr == me:
+                # rank-local cross-place move: reference pass-through,
+                # the HostTransport semantics within one process
+                delivered.append((col, src, dest, payload))
+                continue
+            rows, manifest = col.encode_rows(payload)
+            if isinstance(rows, np.ndarray) and rows.ndim == 2:
+                wire_rows: Any = np.ascontiguousarray(rows)
+                m, wmax = int(rows.shape[0]), int(rows.shape[1])
+                nb = int(rows.size)
+            else:
+                wire_rows = [np.asarray(r, np.uint8) for r in rows]
+                widths = [int(r.shape[0]) for r in wire_rows]
+                m = len(wire_rows)
+                wmax = max(widths, default=0)
+                nb = int(sum(widths))
+            stats.rows += m
+            stats.row_bytes += nb
+            stats.wire_bytes += nb
+            stats.width = max(stats.width, wmax)
+            outgoing[dr].append((col.global_id, src, dest,
+                                 wire_rows, manifest))
+
+        if W > 1:
+            incoming = None
+            if self._device_wire_ready(backend):
+                incoming = self._exchange_rows_device(backend, outgoing)
+            if incoming is None:
+                incoming = backend.alltoall(outgoing)
+            stats.exchanges += 1
+            for sr in range(W):
+                if sr == me:
+                    continue
+                for gid, src, dest, rows, manifest in incoming[sr]:
+                    col = lookup_collection(gid)
+                    if col is None:
+                        raise RuntimeError(
+                            f"no collection with global id {gid} on rank "
+                            f"{me} — SPMD programs must create "
+                            "collections in the same order on every rank")
+                    payload = col.decode_rows(rows, manifest)
+                    delivered.append((col, src, dest, payload))
+
+        with self._lifetime_lock:
+            lt = self.lifetime
+            lt.payloads += stats.payloads
+            lt.local += stats.local
+            lt.rows += stats.rows
+            lt.row_bytes += stats.row_bytes
+            lt.wire_bytes += stats.wire_bytes
+            lt.exchanges += stats.exchanges
+            lt.width = max(lt.width, stats.width)
+        return delivered, stats

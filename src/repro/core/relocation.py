@@ -261,33 +261,74 @@ class CollectiveMoveManager:
         ``_deliver_payloads`` excludes it from ``last_payload_bytes`` — keeping
         the diagonal zero is what makes the two §5.3 accounting surfaces
         agree (``last_counts_matrix.sum() == last_payload_bytes``)."""
-        range_moves, array_count_moves, bag_moves, key_moves = moves
-        n = self.group.size()
-        place_index = {p: i for i, p in enumerate(self.group.members)}
-        counts = np.zeros((n, n), dtype=np.int64)
         payloads: list[tuple[Any, int, int, Any]] = []  # (col, src, dest, payload)
+        try:
+            return self._phase1_extract(moves, payloads)
+        except BaseException:
+            # a failed window must not destroy what it already pulled
+            # out of the source handles: re-insert every extracted
+            # payload at its *source* before the error surfaces at the
+            # finish() barrier — global_size() is conserved
+            self._rollback_payloads(payloads)
+            raise
 
-        # Range moves: find the current holder, extract (splitting chunks).
+    @staticmethod
+    def _rollback_payloads(payloads: list) -> None:
+        for col, src, _dest, payload in reversed(payloads):
+            with col._lock:
+                col._insert_payload(src, payload)
+
+    def _phase1_extract(self, moves, payloads) -> tuple[np.ndarray, list]:
+        range_moves, array_count_moves, bag_moves, key_moves = moves
+        group = self.group
+        n = group.size()
+        place_index = {p: i for i, p in enumerate(group.members)}
+        counts = np.zeros((n, n), dtype=np.int64)
+        local_places = group.local_places()
+
+        # Range moves: extract the locally-held pieces, splitting the
+        # registered range per holder (a range may span several places'
+        # chunks).  In-process the pieces must tile the whole range; on
+        # a process-backed group each rank covers what it holds and the
+        # claims exchange below validates global coverage.
+        claims: list[int] = []
         for m in range_moves:
             with m.collection._lock:
-                src = None
-                for p in self.group.members:
-                    held = any(cr.overlaps(m.r)
-                               for cr in m.collection.ranges(p))
-                    if held:
-                        src = p
-                        break
-                if src is None:
-                    raise KeyError(
-                        f"range {m.r} not held by any place in group")
-                rows = m.collection._extract_range(m.r, src)
-            payload = (m.r, rows)
-            if src != m.dest:
-                nb = m.collection._payload_nbytes(payload)
-                counts[place_index[src], place_index[m.dest]] += nb
-            payloads.append((m.collection, src, m.dest, payload))
+                spans: list[tuple[int, LongRange]] = []
+                for p in local_places:
+                    h = m.collection.handle(p)
+                    prev = None
+                    for inter in h.intersections(m.r):
+                        if prev is not None and prev.end == inter.start:
+                            spans[-1] = (p, LongRange(spans[-1][1].start,
+                                                      inter.end))
+                            prev = spans[-1][1]
+                        else:
+                            spans.append((p, inter))
+                            prev = inter
+                spans.sort(key=lambda t: t[1].start)
+                covered = sum(s.size for _, s in spans)
+                if not group.process_backed:
+                    if covered == 0:
+                        raise KeyError(
+                            f"range {m.r} not held by any place in group")
+                    if covered != m.r.size \
+                            or spans[0][1].start != m.r.start:
+                        raise KeyError(
+                            f"range {m.r} only partially held: "
+                            f"{covered}/{m.r.size} entries present")
+                claims.append(covered)
+                for p, span in spans:
+                    rows = m.collection._extract_range(span, p)
+                    payload = (span, rows)
+                    payloads.append((m.collection, p, m.dest, payload))
+                    if p != m.dest:
+                        nb = m.collection._payload_nbytes(payload)
+                        counts[place_index[p], place_index[m.dest]] += nb
 
         for m in array_count_moves:
+            if not group.is_local(m.src):
+                continue   # the owning rank extracts (SPMD registration)
             remaining = m.count
             with m.collection._lock:
                 for r in list(m.collection.ranges(m.src)):
@@ -307,6 +348,8 @@ class CollectiveMoveManager:
                     f"place {m.src} holds fewer than {m.count} entries")
 
         for m in bag_moves:
+            if not group.is_local(m.src):
+                continue
             with m.collection._lock:
                 payload = m.collection._extract_count(m.src, m.count)
             if m.src != m.dest:
@@ -315,6 +358,8 @@ class CollectiveMoveManager:
             payloads.append((m.collection, m.src, m.dest, payload))
 
         for m in key_moves:
+            if not group.is_local(m.src):
+                continue
             by_dest: dict[int, list] = {}
             for k in m.collection.keys(m.src):
                 d = m.rule(k)
@@ -329,6 +374,18 @@ class CollectiveMoveManager:
                 counts[place_index[m.src], place_index[d]] += nb
                 payloads.append((m.collection, m.src, d, payload))
 
+        # process-backed groups: the counts Alltoall really crosses
+        # processes (allreduce-sum of the per-rank matrices), and range
+        # coverage is validated globally — extraction already happened,
+        # so a coverage failure rolls back via the caller
+        counts = group.exchange_counts(counts)
+        if group.process_backed and range_moves:
+            totals = group.exchange_range_claims(claims)
+            for m, got in zip(range_moves, totals):
+                if got != m.r.size:
+                    raise KeyError(
+                        f"range {m.r} only partially held: {got}/"
+                        f"{m.r.size} entries present across all ranks")
         return counts, payloads
 
     def _deliver_payloads(self, payloads: list,

@@ -119,10 +119,23 @@ def spmd_team_reduce(local_state: Any, reducer: Reducer, axis_name: str) -> Any:
 
 def allgather1(group: PlaceGroup, values: Sequence[float]) -> np.ndarray:
     """Paper §4.5's ``allGather1``: every place contributes one scalar and
-    receives the full vector (the load-balancer's cost exchange)."""
+    receives the full vector (the load-balancer's cost exchange).
+
+    On a process-backed group the exchange is real: each rank's vector
+    is authoritative only at its local places' slots, and every rank
+    receives the merged full vector (collective — all ranks must
+    call)."""
     if len(values) != group.size():
         raise ValueError("one value per place required")
-    return np.asarray(list(values), dtype=np.float64)
+    out = np.asarray(list(values), dtype=np.float64)
+    if group.process_backed:
+        merged = np.zeros(group.size(), dtype=np.float64)
+        for r, vec in enumerate(group.backend.allgather(out)):
+            for i, p in enumerate(group.members):
+                if group.rank_of(p) == r:
+                    merged[i] = vec[i]
+        out = merged
+    return out
 
 
 def spmd_allgather1(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
@@ -132,8 +145,18 @@ def spmd_allgather1(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
 
 def broadcast_from(group: PlaceGroup, owner: int, value: np.ndarray,
                    sinks: dict[int, Callable[[np.ndarray], None]]) -> None:
-    """One-producer broadcast (CachableArray.broadcast's transport)."""
-    for p in group.members:
+    """One-producer broadcast (CachableArray.broadcast's transport).
+
+    Process-backed groups really broadcast: the rank owning ``owner``
+    contributes the value, every rank applies it to its *local*
+    non-owner sinks (collective — ``value`` may be None on non-owner
+    ranks)."""
+    if group.process_backed:
+        value = group.backend.broadcast(value, root=group.rank_of(owner))
+        targets = group.local_places()
+    else:
+        targets = group.members
+    for p in targets:
         if p == owner:
             continue
         sinks[p](np.copy(value))

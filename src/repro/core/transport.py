@@ -272,15 +272,18 @@ class DeviceTransport:
         stats.wire_bytes += int(ship.sum()) * W
 
         # receive layout: shard d's prefix holds, for src 0..n-1, the
-        # ship[src, d] rows that src packed for d, in src's order
-        host_recv = np.asarray(recv) \
-            if any(not e["dev"] for e in bucket) else None
+        # ship[src, d] rows that src packed for d, in src's order.
+        # Host-decoded entries copy only their own row block to host —
+        # never the whole (n, S, W) padded capacity, which would drag
+        # the device-resident KV rows of a mixed bucket along with it
         offsets = np.zeros(n, np.int64)
         for si in range(n):
             for e in per_src[si]:
                 di, m = e["di"], e["m"]
                 lo = int(offsets[di])
-                block = (recv if e["dev"] else host_recv)[di, lo:lo + m]
+                block = recv[di, lo:lo + m]
+                if not e["dev"]:
+                    block = np.asarray(block)
                 offsets[di] += m
                 rows = block if "mat" in e \
                     else [block[i] for i in range(m)]
@@ -332,15 +335,22 @@ class DeviceTransport:
 
 def make_transport(spec: Any) -> RelocationTransport:
     """``None``/``"host"`` → :class:`HostTransport`, ``"device"`` →
-    :class:`DeviceTransport`, an instance passes through (shared jit
-    caches across managers/windows)."""
+    :class:`DeviceTransport`, ``"distributed"`` → the multi-process
+    :class:`~repro.core.distributed.DistributedTransport` (binds to the
+    launching process backend, degrades to the host loopback in a
+    world-size-1 run); an instance passes through (shared jit caches
+    across managers/windows)."""
     if spec is None or spec == "host":
         return HostTransport()
     if spec == "device":
         return DeviceTransport()
+    if spec == "distributed":
+        from .distributed import DistributedTransport
+
+        return DistributedTransport()
     if isinstance(spec, str):
         raise ValueError(f"unknown transport {spec!r} "
-                         "(expected 'host' or 'device')")
+                         "(expected 'host', 'device' or 'distributed')")
     # fail at config time, not on a background delivery thread: the
     # instance must implement the protocol (a bare class — an easy
     # typo — is rejected too)

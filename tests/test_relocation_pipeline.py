@@ -410,3 +410,75 @@ def test_distidmap_put_during_background_reconcile():
     dist = m.get_distribution()
     for k in range(300, 600):
         assert dist.owner_of(k) == 3
+
+
+# ---------------------------------------------------------------------------
+# phase-1 failure safety (ISSUE 6 satellites): no entry loss, ever
+# ---------------------------------------------------------------------------
+class TestPhase1FailureSafety:
+    def _two_holder_col(self):
+        g = PlaceGroup(3)
+        col = DistArray(g, track=True)
+        col.add_chunk(0, LongRange(0, 4), np.arange(8.).reshape(4, 2))
+        col.add_chunk(1, LongRange(4, 8), np.arange(8., 16.).reshape(4, 2))
+        return g, col
+
+    def test_cross_holder_range_move_relocates_whole(self):
+        """A range spanning two holders' chunks splits per holder
+        instead of raising 'only partially held locally'."""
+        g, col = self._two_holder_col()
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(2, 6), 2, mm)
+        mm.sync()
+        assert col.global_size() == 8
+        assert col.local_size(2) == 4
+        assert [(r.start, r.end) for r in col.ranges(0)] == [(0, 2)]
+        assert [(r.start, r.end) for r in col.ranges(1)] == [(6, 8)]
+        got = np.concatenate([col.handle(2).chunks[r]
+                              for r in col.ranges(2)])
+        assert np.array_equal(got, np.arange(4., 12.).reshape(4, 2))
+        # both pieces really crossed places and were accounted
+        assert mm.last_counts_matrix.sum() == mm.last_payload_bytes > 0
+
+    def test_failed_window_rolls_back_extracted_payloads(self):
+        """The confirmed data-loss repro: a two-move window whose second
+        move fails must re-insert what the first move extracted — the
+        error still surfaces at finish(), global_size() is conserved."""
+        g, col = self._two_holder_col()
+        before = entry_multiset(col, 8)
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(0, 4), 2, mm)
+        # overlaps what the first move just extracted -> phase 1 raises
+        col.move_range_at_sync(LongRange(2, 6), 2, mm)
+        handle = mm.sync_async()
+        with pytest.raises(KeyError, match="partially held"):
+            handle.finish()
+        assert col.global_size() == 8
+        assert entry_multiset(col, 8) == before
+
+    def test_failed_window_rolls_back_key_moves_too(self):
+        g = PlaceGroup(3)
+        m = DistIdMap(g)
+        for k in range(6):
+            m.put(k % 2, k, np.float64(k))
+        col = DistArray(g, track=True)
+        col.add_chunk(0, LongRange(0, 4), np.arange(8.).reshape(4, 2))
+        mm = CollectiveMoveManager(g)
+        m.move_at_sync(0, lambda k: 2, mm)          # extracts fine
+        col.move_range_at_sync(LongRange(2, 8), 2, mm)   # then fails
+        with pytest.raises(KeyError):
+            mm.sync()
+        assert m.global_size() == 6
+        assert sorted(m.keys(0)) == [0, 2, 4]
+        assert col.global_size() == 4
+
+    def test_partial_extract_leaves_handle_untouched(self):
+        """_ChunkHandle.extract validates coverage before popping: a
+        partial hold raises without destroying the held intersection."""
+        g = PlaceGroup(2)
+        col = DistArray(g, track=False)
+        col.add_chunk(0, LongRange(0, 4), np.arange(8.).reshape(4, 2))
+        with pytest.raises(KeyError, match="partially held"):
+            col.handle(0).extract(LongRange(2, 6))
+        assert col.local_size(0) == 4
+        assert [(r.start, r.end) for r in col.ranges(0)] == [(0, 4)]

@@ -151,3 +151,24 @@ class TestTeamReduceEquivalence:
         # place 2 holds nothing: identity state
         out = local_reduce(col, 2, SumReducer())
         assert np.array_equal(out, np.zeros(3))
+
+
+class TestSubgroupMeshScope:
+    """ISSUE 6 satellite: a proper subgroup must not inherit the
+    parent's mesh/axis — the named axis spans every parent member, so
+    device collectives 'for the subgroup' would silently run over the
+    full axis."""
+
+    def test_proper_subgroup_drops_mesh_binding(self):
+        g = PlaceGroup(4, mesh=object(), axis="p")
+        sub = g.subgroup([0, 2])
+        assert sub.mesh is None
+        assert sub.axis is None
+        assert sub.members == (0, 2)
+
+    def test_full_subgroup_keeps_mesh_binding(self):
+        mesh = object()
+        g = PlaceGroup(4, mesh=mesh, axis="p")
+        same = g.subgroup([0, 1, 2, 3])
+        assert same.mesh is mesh
+        assert same.axis == "p"

@@ -529,6 +529,9 @@ class TestTransportParity:
         assert isinstance(make_transport(None), HostTransport)
         assert isinstance(make_transport("host"), HostTransport)
         assert isinstance(make_transport("device"), DeviceTransport)
+        from repro.core import DistributedTransport
+        assert isinstance(make_transport("distributed"),
+                          DistributedTransport)
         t = DeviceTransport()
         assert make_transport(t) is t
         with pytest.raises(ValueError):
@@ -542,6 +545,50 @@ class TestTransportParity:
 # ---------------------------------------------------------------------------
 # device data plane through the GLB steal loop (rows ride the all_to_all)
 # ---------------------------------------------------------------------------
+class TestMixedBucketHostCopies:
+    """ISSUE 6 satellite: when one width class carries both pickled
+    metadata and device-resident rows, only the host-decoded entries'
+    row blocks may be copied to host — never the whole padded
+    (n, S, W) receive buffer (which would drag the KV rows along)."""
+
+    class _NpSpy:
+        def __init__(self, real):
+            self._real = real
+            self.asarray_ndims = []
+
+        def __getattr__(self, name):
+            return getattr(self._real, name)
+
+        def asarray(self, x, *a, **k):
+            if hasattr(x, "ndim"):
+                self.asarray_ndims.append(int(x.ndim))
+            return self._real.asarray(x, *a, **k)
+
+    def test_host_copies_are_per_block_not_full_buffer(self, monkeypatch):
+        import jax
+
+        import repro.core.transport as transport_mod
+
+        g = PlaceGroup(2)
+        m = DistIdMap(g)
+        for p in g.members:
+            m.handle(p)
+        meta = "x" * 40                               # pickles to ~60 B
+        m.put(0, 0, meta)
+        m.put(0, 1, jax.device_put(np.arange(12, dtype=np.float32)))
+        spy = self._NpSpy(np)
+        monkeypatch.setattr(transport_mod, "np", spy)
+        mm = CollectiveMoveManager(g, transport="device")
+        m.move_at_sync(0, lambda k: 1, mm)
+        mm.sync()
+        st_ = mm.last_transport_stats
+        assert st_.exchanges == 1      # one width class held both rows
+        assert 3 not in spy.asarray_ndims
+        assert m.get(1, 0) == meta
+        assert np.array_equal(np.asarray(m.get(1, 1)),
+                              np.arange(12, dtype=np.float32))
+
+
 class TestDeviceStealTransport:
     def test_ship_rows_bitwise_matches_id_mode(self):
         from repro.core import (DistArrayWorkload, GLBConfig,
