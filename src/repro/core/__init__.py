@@ -53,6 +53,7 @@ from .spmd_glb import (
     spmd_steal_step,
     steal_candidates,
 )
+from . import telemetry
 from .teamed import (
     Reducer,
     allgather1,
@@ -61,6 +62,7 @@ from .teamed import (
     spmd_team_reduce,
     team_reduce,
 )
+from .telemetry import MetricsRegistry, Tracer
 from .transport import (
     DeviceTransport,
     HostTransport,
@@ -88,6 +90,7 @@ __all__ = [
     "spmd_steal_step", "steal_candidates",
     "Reducer", "allgather1", "local_reduce", "spmd_allgather1",
     "spmd_team_reduce", "team_reduce",
+    "telemetry", "MetricsRegistry", "Tracer",
     "DeviceTransport", "HostTransport", "RelocationTransport",
     "TransportStats", "make_transport",
 ]

@@ -37,14 +37,16 @@ owning ``src`` extracts).  ``sync()`` is collective.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import traceback
 from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from . import telemetry
 from .collections import PlaceGroup, lookup_collection
-from .transport import TransportStats
+from .transport import TransportStats, _account_exchange
 
 __all__ = [
     "LocalBackend",
@@ -171,26 +173,42 @@ def _set_current_backend(backend) -> None:
 # ---------------------------------------------------------------------------
 # The launcher
 # ---------------------------------------------------------------------------
-def _worker_main(fn, rank, world_size, conns, result_conn, args, kwargs):
+def _worker_main(fn, rank, world_size, conns, result_conn, args, kwargs,
+                 collect_trace=False):
     """Spawn entry point (module-level so it pickles under spawn)."""
     backend = PipeBackend(rank, world_size, conns)
     _set_current_backend(backend)
+    trace = None
     try:
+        if collect_trace:
+            # every record this rank emits is pid-tagged with its rank;
+            # the shutdown allgather below then hands every rank the
+            # same merged cross-rank timeline
+            telemetry.enable(rank=rank)
         result = fn(backend, *args, **kwargs)
-        payload = ("ok", result)
+        if collect_trace:
+            try:
+                trace = telemetry.allgather_spans(backend)
+            except Exception:
+                # a peer died mid-merge (its failure is reported on its
+                # own result pipe) — degrade to this rank's records
+                trace = telemetry.tracer().records()
+        payload = ("ok", result, trace)
     except BaseException:
-        payload = ("err", traceback.format_exc())
+        payload = ("err", traceback.format_exc(), None)
     try:
         result_conn.send(payload)
     except Exception:
         # unpicklable result: report that instead of hanging the parent
-        result_conn.send(("err", f"rank {rank}: result not picklable"))
+        result_conn.send(("err", f"rank {rank}: result not picklable",
+                          None))
     finally:
         result_conn.close()
 
 
 def run_multiprocess(fn: Callable, nprocs: int, *args,
-                     timeout: float = 180.0, **kwargs) -> list:
+                     timeout: float = 180.0,
+                     collect_trace: bool = False, **kwargs):
     """Run ``fn(backend, *args, **kwargs)`` SPMD on ``nprocs`` fresh OS
     processes (``spawn`` — no inherited JAX state) wired into a full
     pipe mesh; returns the per-rank results in rank order.
@@ -201,16 +219,30 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
     the main module in every child, the standard multiprocessing
     contract.  Any rank's exception re-raises here with its traceback;
     ``nprocs == 1`` runs ``fn`` inline on a :class:`LocalBackend` (no
-    spawn, no pickling)."""
+    spawn, no pickling).
+
+    ``collect_trace=True`` enables telemetry in every worker (rank
+    tags each record's ``pid``), merges all ranks' tracer buffers over
+    the backend allgather at shutdown, and returns ``(results,
+    timeline)`` — one rank-tagged list of trace-event records ready for
+    :func:`repro.core.telemetry.chrome_trace`."""
     if nprocs < 1:
         raise ValueError(f"nprocs must be >= 1, got {nprocs}")
     if nprocs == 1:
         backend = LocalBackend()
         prev = current_backend()
         _set_current_backend(backend)
+        was_enabled = telemetry.enabled()
+        if collect_trace and not was_enabled:
+            telemetry.enable(rank=0)
         try:
-            return [fn(backend, *args, **kwargs)]
+            results = [fn(backend, *args, **kwargs)]
+            if collect_trace:
+                return results, telemetry.allgather_spans(backend)
+            return results
         finally:
+            if collect_trace and not was_enabled:
+                telemetry.disable()
             _set_current_backend(prev)
 
     import multiprocessing as mp
@@ -228,7 +260,7 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
         parent_end, child_end = ctx.Pipe(duplex=False)
         p = ctx.Process(target=_worker_main,
                         args=(fn, r, nprocs, ends[r], child_end,
-                              args, kwargs),
+                              args, kwargs, collect_trace),
                         daemon=True)
         p.start()
         child_end.close()
@@ -239,13 +271,14 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
 
     results: list = [None] * nprocs
     errors: list[str] = []
+    timeline: list | None = None
     try:
         for r, conn in enumerate(result_conns):
             if not conn.poll(timeout):
                 errors.append(f"rank {r}: no result within {timeout}s")
                 continue
             try:
-                status, value = conn.recv()
+                status, value, trace = conn.recv()
             except EOFError:
                 errors.append(
                     f"rank {r}: died without reporting "
@@ -256,6 +289,12 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
                 continue
             if status == "ok":
                 results[r] = value
+                # the shutdown allgather handed every rank the same
+                # merged timeline; keep the first (longest, if a peer
+                # degraded to local records mid-failure)
+                if trace is not None and (timeline is None
+                                          or len(trace) > len(timeline)):
+                    timeline = trace
             else:
                 errors.append(f"rank {r} failed:\n{value}")
     finally:
@@ -268,6 +307,8 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
             conn.close()
     if errors:
         raise RuntimeError("run_multiprocess: " + "\n".join(errors))
+    if collect_trace:
+        return results, (timeline or [])
     return results
 
 
@@ -389,6 +430,10 @@ class DistributedTransport:
         self.device_wire = device_wire
         self.lifetime = TransportStats(kind="distributed")
         self._lifetime_lock = threading.Lock()
+        # exchanges are collective and issued in program order on every
+        # rank, so this per-instance ordinal doubles as the cross-rank
+        # sequence tag on the transport.exchange span
+        self._seq = itertools.count()
 
     def _resolve_backend(self, group):
         b = getattr(group, "backend", None)
@@ -499,6 +544,11 @@ class DistributedTransport:
 
     # -- the exchange ------------------------------------------------------
     def exchange(self, group, counts, payloads):
+        with telemetry.span("transport.exchange", kind="distributed",
+                            seq=next(self._seq)) as sp:
+            return self._exchange(group, counts, payloads, sp)
+
+    def _exchange(self, group, counts, payloads, sp):
         backend = self._resolve_backend(group)
         W = backend.world_size
         me = backend.rank
@@ -561,13 +611,7 @@ class DistributedTransport:
                     payload = col.decode_rows(rows, manifest)
                     delivered.append((col, src, dest, payload))
 
-        with self._lifetime_lock:
-            lt = self.lifetime
-            lt.payloads += stats.payloads
-            lt.local += stats.local
-            lt.rows += stats.rows
-            lt.row_bytes += stats.row_bytes
-            lt.wire_bytes += stats.wire_bytes
-            lt.exchanges += stats.exchanges
-            lt.width = max(lt.width, stats.width)
+        if sp:
+            sp.set(rank=me, world=W)
+        _account_exchange(self, stats, sp)
         return delivered, stats

@@ -52,11 +52,12 @@ collections through one ``sync_async`` window (paper Listing 12).
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
 from typing import Any, Callable, Protocol, Sequence
 
 import numpy as np
 
+from . import telemetry
 from .balancer import BalanceDecision, LevelExtremes, Proportional
 from .collections import DistArray, PlaceGroup
 from .relocation import AsyncRelocation, CollectiveMoveManager
@@ -337,6 +338,21 @@ class GLBStats:
     def overlap_fraction(self) -> float:
         return self.syncs_overlapped / max(self.syncs_total, 1)
 
+    def as_dict(self, prefix: str = "glb.") -> dict:
+        """Flat ``{name: number}`` view (bench JSON / registry shape)."""
+        d = {f"{prefix}{f.name}": getattr(self, f.name)
+             for f in fields(self)}
+        d[f"{prefix}overlap_fraction"] = self.overlap_fraction
+        return d
+
+    def publish(self, registry=None) -> None:
+        """Push the current totals into the metrics registry as
+        ``glb.*`` gauges (the fields are already cumulative, so gauges
+        — republishing overwrites rather than double counts)."""
+        reg = registry if registry is not None else telemetry.metrics()
+        for name, v in self.as_dict().items():
+            reg.gauge(name).set(v)
+
 
 # ---------------------------------------------------------------------------
 # The balancer
@@ -482,46 +498,57 @@ class GlobalLoadBalancer:
             # so by the next trigger this wait is normally instant; only
             # the cheap accounting commit stays deferred.
             self._pending[-1].wait_delivered()
-        times = allgather1(self.group, self._acc)   # teamed cost exchange
-        if self.cfg.ema > 0:
-            if self._smoothed is None:
-                self._smoothed = times
+        if telemetry.enabled():
+            # registry polls these cumulative totals at read time
+            telemetry.metrics().add_publisher(id(self.stats),
+                                              self.stats.publish)
+        with telemetry.span("glb.plan") as sp:
+            times = allgather1(self.group, self._acc)  # teamed cost exchange
+            if self.cfg.ema > 0:
+                if self._smoothed is None:
+                    self._smoothed = times
+                else:
+                    self._smoothed = (self.cfg.ema * self._smoothed
+                                      + (1 - self.cfg.ema) * times)
+                times = self._smoothed
+            loads = np.asarray(self.workload.loads())
+            if len(self._alive) < self.n:
+                # compact to the surviving members, plan, remap the move
+                # indices back — a dead place is never a source or target
+                alive = self._alive
+                sub = self.policy.plan(np.asarray(times)[alive],
+                                       loads[alive])
+                decision = BalanceDecision(tuple(
+                    (alive[s], alive[d], c) for s, d, c in sub.moves))
             else:
-                self._smoothed = (self.cfg.ema * self._smoothed
-                                  + (1 - self.cfg.ema) * times)
-            times = self._smoothed
-        loads = np.asarray(self.workload.loads())
-        if len(self._alive) < self.n:
-            # compact to the surviving members, plan, remap the move
-            # indices back — a dead place is never a source or target
-            alive = self._alive
-            sub = self.policy.plan(np.asarray(times)[alive], loads[alive])
-            decision = BalanceDecision(tuple(
-                (alive[s], alive[d], c) for s, d, c in sub.moves))
-        else:
-            decision = self.policy.plan(times, loads)
-        self._acc[:] = 0.0
-        self.history.append(decision)
-        if decision.moves:
-            self.stats.rebalances += 1
-            kw = {}
-            if depth > 1 and self._pending:
-                # chain the new window behind the newest in-flight one:
-                # extraction and delivery stay FIFO across windows
-                kw["after"] = self._pending[-1]
-            handle = self.workload.transfer(
-                decision.moves, asynchronous=self.cfg.asynchronous, **kw)
-            if handle is not None:
-                self._pending.append(handle)
-                if depth > 1:
-                    # double buffer: delivery starts as soon as phase 1
-                    # completes, overlapping the caller's next compute
-                    handle.enqueue()
-            # account what actually moved after min_keep/availability
-            # clamping, not the policy's planned total
-            self.stats.entries_rebalanced += getattr(
-                self.workload, "last_transfer_count", decision.total_moved)
-        return decision
+                decision = self.policy.plan(times, loads)
+            self._acc[:] = 0.0
+            self.history.append(decision)
+            if decision.moves:
+                self.stats.rebalances += 1
+                kw = {}
+                if depth > 1 and self._pending:
+                    # chain the new window behind the newest in-flight
+                    # one: extraction and delivery stay FIFO
+                    kw["after"] = self._pending[-1]
+                handle = self.workload.transfer(
+                    decision.moves, asynchronous=self.cfg.asynchronous,
+                    **kw)
+                if handle is not None:
+                    self._pending.append(handle)
+                    if depth > 1:
+                        # double buffer: delivery starts as soon as
+                        # phase 1 completes, overlapping the caller's
+                        # next compute
+                        handle.enqueue()
+                # account what actually moved after min_keep/
+                # availability clamping, not the policy's planned total
+                self.stats.entries_rebalanced += getattr(
+                    self.workload, "last_transfer_count",
+                    decision.total_moved)
+            if sp:
+                sp.set(iter=self.iter, moves=len(decision.moves))
+            return decision
 
     def has_pending(self) -> bool:
         """True while a launched migration window has not been committed
@@ -553,15 +580,22 @@ class GlobalLoadBalancer:
 
         The handle is detached *before* the barrier: if phase 1 raised on
         the background thread the exception propagates here, but the
-        balancer is left consistent (no sync counted for the failed
-        window) so the caller can keep stepping after handling it."""
+        balancer is left consistent so the caller can keep stepping
+        after handling it.  A failed window still lands in the overlap
+        *denominator* as not-overlapped (``overlapped`` is False for an
+        errored handle) — silently dropping it would overstate
+        ``overlap_fraction``; only the bytes accounting and the
+        ``on_finish`` hook are success-only, since a failed window
+        published nothing."""
         pending = self._pending.pop(0)
-        pending.finish()
-        self.stats.syncs_total += 1
+        try:
+            pending.finish()
+        finally:
+            self.stats.syncs_total += 1
+            if pending.overlapped:
+                self.stats.syncs_overlapped += 1
+            self.last_trace = dict(pending.trace)
         self.stats.bytes_moved += pending.manager.last_payload_bytes
-        if pending.overlapped:
-            self.stats.syncs_overlapped += 1
-        self.last_trace = dict(pending.trace)
         if self.on_finish is not None:
             self.on_finish(pending)
 
@@ -589,6 +623,13 @@ class GlobalLoadBalancer:
         if thief not in self._alive:
             return 0
         self.finish()   # never race an in-flight rebalance
+        with telemetry.span("glb.steal", thief=thief) as sp:
+            got = self._steal(thief)
+            if sp:
+                sp.set(acquired=got)
+            return got
+
+    def _steal(self, thief: int) -> int:
         t0 = time.perf_counter()
         self.stats.steals_attempted += 1
         loads = self.workload.loads()
@@ -627,17 +668,24 @@ class GlobalLoadBalancer:
         work.  Sets the terminated flag when nothing moved and every
         place is idle (distributed termination detection, host model —
         device-side this is a psum over outstanding-work counters)."""
-        self.finish()
-        loads = self.workload.loads()
-        total = 0
-        for p in self._alive:
-            if loads[p] <= self.cfg.idle_threshold:
-                total += self.steal(p)
-        if total == 0 and bool(
-                np.all(np.asarray(self.workload.loads())[self._alive]
-                       <= self.cfg.idle_threshold)):
-            self._terminated = True
-        return total
+        if telemetry.enabled():
+            # registry polls these cumulative totals at read time
+            telemetry.metrics().add_publisher(id(self.stats),
+                                              self.stats.publish)
+        with telemetry.span("glb.steal_round") as sp:
+            self.finish()
+            loads = self.workload.loads()
+            total = 0
+            for p in self._alive:
+                if loads[p] <= self.cfg.idle_threshold:
+                    total += self.steal(p)
+            if total == 0 and bool(
+                    np.all(np.asarray(self.workload.loads())[self._alive]
+                           <= self.cfg.idle_threshold)):
+                self._terminated = True
+            if sp:
+                sp.set(stolen=total, terminated=self._terminated)
+            return total
 
     def is_terminated(self) -> bool:
         return self._terminated

@@ -32,6 +32,7 @@ Two halves, mirroring the paper's design:
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from dataclasses import dataclass, field
@@ -43,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import axis_size
+from . import telemetry
 from .collections import DistArray, DistBag, DistMap, PlaceGroup
 from .distribution import LongRange
 from .transport import TransportStats, make_transport
@@ -235,6 +237,10 @@ class CollectiveMoveManager:
         handle = AsyncRelocation(self, moves, tuple(update_dists),
                                  after=prev)
         self._inflight.append(handle)
+        if telemetry.enabled():
+            telemetry.observe(
+                "reloc.queue_depth",
+                len([h for h in self._inflight if not h.finished]))
         if prev is not None and not prev.finished:
             # start the predecessor's delivery: it overlaps this
             # window's phase 1 (and the caller's compute)
@@ -421,6 +427,13 @@ class CollectiveMoveManager:
 
 
 
+# process-wide window ordinal: every span/event a window emits carries
+# ``window=<id>`` (via the tracer's thread-local context), so a Perfetto
+# timeline correlates a reloc.window span with its phase1/deliver/
+# transport.exchange children even across the three threads involved
+_WINDOW_IDS = itertools.count()
+
+
 class AsyncRelocation:
     """An in-flight teamed relocation started by
     :meth:`CollectiveMoveManager.sync_async`.
@@ -460,6 +473,11 @@ class AsyncRelocation:
         self._phase2_claimed = False
         self._delivery_thread: threading.Thread | None = None
         self.finished = False
+        self.window_id = next(_WINDOW_IDS)
+        # host-side overlap stamps; the structured telemetry spans
+        # (reloc.phase1 / reloc.deliver / reloc.commit / reloc.window,
+        # all tagged window=<id>) supersede these for timeline analysis,
+        # but `overlapped` and the benchmarks keep reading them
         self.trace: dict[str, float] = {"t_submit": time.perf_counter()}
         self._thread = threading.Thread(
             target=self._run_phase1, args=(moves,), daemon=True)
@@ -471,10 +489,17 @@ class AsyncRelocation:
             # *delivered*: key-rule moves enumerate the source's keys at
             # extraction time, so entries still in the predecessor's
             # flight must have landed first or the move would silently
-            # miss them (extraction ordering alone is not enough)
+            # miss them (extraction ordering alone is not enough) — the
+            # idle wait stays outside the span so reloc.phase1 times
+            # only the counts exchange + extraction/packing
             if self._after is not None:
                 self._after._delivered.wait()
-            self._counts, self._payloads = self.manager._phase1(moves)
+            with telemetry.context(window=self.window_id), \
+                    telemetry.span("reloc.phase1") as sp:
+                self._counts, self._payloads = self.manager._phase1(moves)
+                if sp:
+                    sp.set(payloads=len(self._payloads),
+                           counts_bytes=int(self._counts.sum()))
         except BaseException as e:  # re-raised at the finish() barrier
             self._exc = e
         finally:
@@ -505,9 +530,13 @@ class AsyncRelocation:
         (delivery enqueued before the commit barrier): delivery also
         completed before the commit was requested — i.e. the commit was
         free.  Accounted per window, so overlapping handles each report
-        their own overlap."""
+        their own overlap.  A failed window (phase-1 raise + rollback)
+        is never overlapped — it did no useful work off the critical
+        path, and stats that skip it entirely would overstate the
+        pipeline (see ``GLBStats.overlap_fraction``)."""
         t_fin = self.trace.get("t_finish_enter")
-        if t_fin is None or "t_counts_ready" not in self.trace:
+        if t_fin is None or "t_counts_ready" not in self.trace \
+                or self._exc is not None:
             return False
         if self.trace.get("t_enqueue", t_fin) < t_fin \
                 and "t_delivered" in self.trace:
@@ -526,6 +555,8 @@ class AsyncRelocation:
                 return self
             self._phase2_claimed = True
             self.trace["t_enqueue"] = time.perf_counter()
+            if telemetry.enabled():
+                telemetry.event("reloc.enqueue", window=self.window_id)
             self._delivery_thread = threading.Thread(
                 target=self._run_phase2, daemon=True)
             self._delivery_thread.start()
@@ -541,10 +572,17 @@ class AsyncRelocation:
                 return
             if self._after is not None:
                 self._after._delivered.wait()
-            self._moved_bytes, self.transport_stats = \
-                self.manager._deliver_payloads(self._payloads, self._counts)
-            for col in self._update_dists:
-                col.update_dist()
+            # the transport.exchange span opens on this same thread, so
+            # it nests inside reloc.deliver and inherits the window tag
+            with telemetry.context(window=self.window_id), \
+                    telemetry.span("reloc.deliver") as sp:
+                self._moved_bytes, self.transport_stats = \
+                    self.manager._deliver_payloads(self._payloads,
+                                                   self._counts)
+                for col in self._update_dists:
+                    col.update_dist()
+                if sp:
+                    sp.set(moved_bytes=self._moved_bytes)
         except BaseException as e:  # re-raised at the finish() barrier
             self._exc = e
         finally:
@@ -578,21 +616,35 @@ class AsyncRelocation:
         if self.finished:
             return self
         self.trace["t_finish_enter"] = time.perf_counter()
-        with self._enqueue_lock:
-            claimed = not self._phase2_claimed
+        with telemetry.span("reloc.commit", window=self.window_id):
+            with self._enqueue_lock:
+                claimed = not self._phase2_claimed
+                if claimed:
+                    self._phase2_claimed = True
             if claimed:
-                self._phase2_claimed = True
-        if claimed:
-            self._run_phase2()
-        else:
-            self._delivered.wait()
-        if self._exc is not None:
-            raise self._exc
-        self.manager._commit(self._counts, self._moved_bytes,
-                             self.transport_stats)
+                self._run_phase2()
+            else:
+                self._delivered.wait()
+            if self._exc is not None:
+                raise self._exc
+            self.manager._commit(self._counts, self._moved_bytes,
+                                 self.transport_stats)
         self._payloads = None   # a chained successor must not pin them
         self.trace["t_done"] = time.perf_counter()
         self.finished = True
+        if telemetry.enabled():
+            # the whole window as one span, submit → done: it ran on
+            # three threads, so it is assembled from the trace stamps
+            # rather than a single context manager
+            now = telemetry.now_us()
+            dur_us = (self.trace["t_done"]
+                      - self.trace["t_submit"]) * 1e6
+            telemetry.complete("reloc.window", now - dur_us, now,
+                               window=self.window_id,
+                               overlapped=self.overlapped,
+                               moved_bytes=self._moved_bytes)
+            telemetry.observe("reloc.window_s", dur_us / 1e6)
+            telemetry.observe("reloc.window_bytes", self._moved_bytes)
         return self
 
 

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..compat import axis_size
+from . import telemetry
 from .distribution import LongRange
 
 __all__ = [
@@ -451,6 +452,22 @@ def run_device_steal(col, lifelines: dict[int, tuple[int, ...]],
     per-place load vector equals the host ``steal_pass`` policy's
     exactly.
     """
+    # host-side wrapper span only: the jitted loop body itself is never
+    # traced (tracing inside jit would bake timestamps into the program)
+    with telemetry.span("glb.device_loop", ship_rows=ship_rows) as sp:
+        res = _run_device_steal(
+            col, lifelines, alive, steal_ratio=steal_ratio,
+            min_keep=min_keep, idle_threshold=idle_threshold,
+            max_rounds=max_rounds, capacity=capacity, ship_rows=ship_rows)
+        if sp:
+            sp.set(rounds=res["rounds"], stolen=res["stolen"],
+                   capacity=res["capacity"])
+        return res
+
+
+def _run_device_steal(col, lifelines, alive, *, steal_ratio, min_keep,
+                      idle_threshold, max_rounds, capacity,
+                      ship_rows) -> dict:
     members = tuple(col.group.members)
     n = len(members)
     empty = {"rounds": 0, "attempted": 0, "served": 0, "stolen": 0,

@@ -38,10 +38,13 @@ counts diagonal stays zero, keeping the two §5.3 accounting surfaces
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 from typing import Any, Protocol, Sequence, runtime_checkable
 
 import numpy as np
+
+from . import telemetry
 
 __all__ = [
     "RelocationTransport",
@@ -67,6 +70,82 @@ class TransportStats:
     width: int = 0           # widest padded row-width class exchanged
     exchanges: int = 0       # jitted all_to_all dispatches (one per
     #                          row-width class in the window)
+
+    def merge(self, other: "TransportStats") -> "TransportStats":
+        """Accumulate ``other`` into self (lifetime totals from
+        per-window stats; ``width`` is a high-water mark)."""
+        self.payloads += other.payloads
+        self.local += other.local
+        self.rows += other.rows
+        self.row_bytes += other.row_bytes
+        self.wire_bytes += other.wire_bytes
+        self.exchanges += other.exchanges
+        self.width = max(self.width, other.width)
+        return self
+
+    def as_dict(self, prefix: str = "") -> dict:
+        """Flat ``{name: number}`` view — the shape both the metrics
+        registry and the bench JSON consume."""
+        return {
+            f"{prefix}payloads": self.payloads,
+            f"{prefix}local": self.local,
+            f"{prefix}rows": self.rows,
+            f"{prefix}row_bytes": self.row_bytes,
+            f"{prefix}wire_bytes": self.wire_bytes,
+            f"{prefix}width": self.width,
+            f"{prefix}exchanges": self.exchanges,
+        }
+
+    def publish(self, registry=None) -> None:
+        """Snapshot these stats into the metrics registry as
+        ``transport.<kind>.*`` counters (and a ``width`` gauge).
+
+        Values are *set*, not incremented, so this is meant for
+        cumulative stats (a transport's ``lifetime``) and is how the
+        registry-publisher hook works: ``_account_exchange`` registers
+        the lifetime stats once and the registry polls them at read
+        time — the exchange hot path never pays per-field updates."""
+        reg = registry if registry is not None else telemetry.metrics()
+        names = _PUBLISH_NAMES.get(self.kind)
+        if names is None:
+            p = f"transport.{self.kind}."
+            names = tuple(p + f for f in (
+                "payloads", "local", "rows", "row_bytes", "wire_bytes",
+                "exchanges", "width"))
+            _PUBLISH_NAMES[self.kind] = names
+        reg.counter(names[0]).set(self.payloads)
+        reg.counter(names[1]).set(self.local)
+        reg.counter(names[2]).set(self.rows)
+        reg.counter(names[3]).set(self.row_bytes)
+        reg.counter(names[4]).set(self.wire_bytes)
+        reg.counter(names[5]).set(self.exchanges)
+        reg.gauge(names[6]).set(self.width)
+
+
+# metric-name tuples per transport kind, built once (publish is invoked
+# at registry read time but also directly by tests/benches)
+_PUBLISH_NAMES: dict = {}
+
+
+def _account_exchange(transport, stats: TransportStats, sp) -> None:
+    """Shared post-exchange bookkeeping for every backend: fold the
+    window stats into the transport's lifetime totals (under its lock),
+    stamp the open ``transport.exchange`` span, register the lifetime
+    stats as a registry publisher, and feed the wire histograms.  One
+    implementation — the Device and Distributed backends used to each
+    hand-roll the lifetime accumulation."""
+    with transport._lifetime_lock:
+        transport.lifetime.merge(stats)
+    if sp:
+        sp.set(payloads=stats.payloads, local=stats.local,
+               rows=stats.rows, wire_bytes=stats.wire_bytes,
+               width=stats.width, exchanges=stats.exchanges)
+    if telemetry.enabled():
+        telemetry.metrics().add_publisher(
+            id(transport), transport.lifetime.publish)
+        telemetry.observe("transport.exchange_wire_bytes",
+                          stats.wire_bytes)
+        telemetry.observe("transport.exchange_rows", stats.rows)
 
 
 @runtime_checkable
@@ -104,13 +183,25 @@ class HostTransport:
 
     device_plane = False
 
+    def __init__(self):
+        import threading
+
+        self.lifetime = TransportStats(kind="host")
+        self._lifetime_lock = threading.Lock()
+        # per-instance exchange ordinal: the span's seq attribute, so a
+        # timeline orders this transport's windows even across threads
+        self._seq = itertools.count()
+
     def exchange(self, group, counts, payloads):
-        stats = TransportStats(kind="host")
-        for _, src, dest, _ in payloads:
-            if src == dest:
-                stats.local += 1
-            else:
-                stats.payloads += 1
+        with telemetry.span("transport.exchange", kind="host",
+                            seq=next(self._seq)) as sp:
+            stats = TransportStats(kind="host")
+            for _, src, dest, _ in payloads:
+                if src == dest:
+                    stats.local += 1
+                else:
+                    stats.payloads += 1
+            _account_exchange(self, stats, sp)
         return list(payloads), stats
 
 
@@ -143,6 +234,7 @@ class DeviceTransport:
         # threads (the README's shared-jit-cache pattern) — the counter
         # read-modify-writes must not interleave across them
         self._lifetime_lock = threading.Lock()
+        self._seq = itertools.count()
 
     # -- the jitted exchange (cached per (n, S, W)) -----------------------
     def _exchange_fn(self, n: int, S: int, W: int):
@@ -172,6 +264,11 @@ class DeviceTransport:
         return fn
 
     def exchange(self, group, counts, payloads):
+        with telemetry.span("transport.exchange", kind="device",
+                            seq=next(self._seq)) as sp:
+            return self._exchange(group, counts, payloads, sp)
+
+    def _exchange(self, group, counts, payloads, sp):
         import jax
 
         n = group.size()
@@ -223,15 +320,7 @@ class DeviceTransport:
             buckets.setdefault(self._width_class(e["wmax"]), []).append(e)
         for W, bucket in sorted(buckets.items()):
             self._exchange_bucket(n, W, bucket, payloads, delivered, stats)
-        with self._lifetime_lock:
-            lt = self.lifetime
-            lt.payloads += stats.payloads
-            lt.local += stats.local
-            lt.rows += stats.rows
-            lt.row_bytes += stats.row_bytes
-            lt.wire_bytes += stats.wire_bytes
-            lt.exchanges += stats.exchanges
-            lt.width = max(lt.width, stats.width)
+        _account_exchange(self, stats, sp)
         return delivered, stats
 
     def _width_class(self, w: int) -> int:

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core import telemetry
 from ..models import Parallel, zoo
 from ..models import transformer as T
 from .cache import SeqKV
@@ -173,14 +174,17 @@ class DecodeEngine:
         # drain the async dispatch queue (stacking above, unstacking from
         # earlier calls) so the timed window measures *this* decode only
         jax.block_until_ready([s for _, s, _ in prepared])
-        t0 = time.perf_counter()
-        outs = []
-        for _, state, tokens in prepared:
-            for _ in range(max(int(work), 1)):
-                out = self._step(self.params, state, tokens)
-            outs.append(out)
-        jax.block_until_ready(outs)
-        dt = time.perf_counter() - t0
+        with telemetry.span("serve.decode_batch", seqs=n, work=work):
+            t0 = time.perf_counter()
+            outs = []
+            for _, state, tokens in prepared:
+                for _ in range(max(int(work), 1)):
+                    out = self._step(self.params, state, tokens)
+                outs.append(out)
+            jax.block_until_ready(outs)
+            dt = time.perf_counter() - t0
+        if telemetry.enabled():
+            telemetry.observe("serve.decode_s", dt)
         for (chunk, _, _), (out_state, out_tokens) in zip(prepared, outs):
             for i, (kv, new_state) in enumerate(
                     zip(chunk, _unstack_state(out_state, len(chunk)))):

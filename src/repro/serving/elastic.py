@@ -37,6 +37,7 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from ..core import DistIdMap, GLBConfig, GlobalLoadBalancer, PlaceGroup
+from ..core import telemetry
 from ..runtime.fault_tolerance import ElasticWorld, HeartbeatMonitor
 from .cache import Sequence
 from .router import Router
@@ -108,8 +109,10 @@ class ElasticServingDriver:
         distributions: reap orphaned KV and rebuild the router's dispatch
         table — once per window, not per request (Router at scale)."""
         self._refreshes += 1
-        self._collect_orphaned_kv()
-        self.router.refresh()
+        with telemetry.span("serve.dispatch_refresh",
+                            refresh=self._refreshes):
+            self._collect_orphaned_kv()
+            self.router.refresh()
 
     # -- admission (alive replicas only) ----------------------------------
     def admit(self, prompt_len: int, max_new: int = 64,
@@ -255,30 +258,35 @@ class ElasticServingDriver:
         if self.engine is None:
             raise ValueError("decode_round needs an engine "
                              "(ElasticServingDriver(..., engine=...))")
-        self._settle_device_plane_extraction()
-        members = self.workload.members
-        t = np.full(len(members), np.nan)
-        decoded = 0
-        failed = set(failed)
-        for i, p in enumerate(members):
-            if p not in self.group or p in failed:
-                continue
-            seqh = self.seqs.handle(p)
-            kvh = self.kv.handle(p)
-            batch = []
-            for sid in list(kvh):
-                # an in-flight migration window extracts entries on its
-                # background thread — decode only pairs still resident
-                kv = kvh.get(sid)
-                if kv is not None and seqh.get(sid) is not None:
-                    batch.append(kv)
-            w = 1 if work is None else int(work[i])
-            t[i] = self.engine.decode_batch(batch, work=w)
-            decoded += len(batch)
-        info = self.step(t, failed=failed)
-        info["decode_s"] = t
-        info["decoded"] = decoded
-        return info
+        with telemetry.span("serve.decode_round") as sp:
+            self._settle_device_plane_extraction()
+            members = self.workload.members
+            t = np.full(len(members), np.nan)
+            decoded = 0
+            failed = set(failed)
+            for i, p in enumerate(members):
+                if p not in self.group or p in failed:
+                    continue
+                seqh = self.seqs.handle(p)
+                kvh = self.kv.handle(p)
+                batch = []
+                for sid in list(kvh):
+                    # an in-flight migration window extracts entries on
+                    # its background thread — decode only pairs still
+                    # resident
+                    kv = kvh.get(sid)
+                    if kv is not None and seqh.get(sid) is not None:
+                        batch.append(kv)
+                w = 1 if work is None else int(work[i])
+                with telemetry.context(place=p):
+                    t[i] = self.engine.decode_batch(batch, work=w)
+                decoded += len(batch)
+            info = self.step(t, failed=failed)
+            info["decode_s"] = t
+            info["decoded"] = decoded
+            if sp:
+                sp.set(decoded=decoded)
+            return info
 
     def _settle_device_plane_extraction(self) -> None:
         """Device-plane windows deliver point-in-time *reconstructions*

@@ -179,8 +179,10 @@ class TestAsyncRelocation:
 
     def test_glb_overlap_accounting_when_thread_raises(self):
         """A failing background phase 1 must not corrupt the balancer:
-        the error surfaces at the barrier, no sync is counted, and the
-        balancer keeps stepping afterwards."""
+        the error surfaces at the barrier, the failed window lands in
+        the overlap denominator as not-overlapped (instead of silently
+        vanishing from the accounting), and the balancer keeps stepping
+        afterwards."""
         g, col = make_col(n_places=4, n=120)
         glb = GlobalLoadBalancer(g, DistArrayWorkload(col),
                                  GLBConfig(period=1, asynchronous=True))
@@ -190,15 +192,18 @@ class TestAsyncRelocation:
         with pytest.raises(ValueError):
             glb.finish()
         assert not glb._pending                     # detached, not stuck
-        assert glb.stats.syncs_total == 0
+        # the failed window is counted — as not overlapped — so
+        # overlap_fraction reflects every window that entered the plane
+        assert glb.stats.syncs_total == 1
         assert glb.stats.syncs_overlapped == 0
+        assert glb.stats.bytes_moved == 0           # nothing delivered
         # place 0 was emptied by the failed extraction; make place 1 the
         # straggler so the next window plans (and executes) a real move
         glb.record_all([1.0, 4.0, 1.0, 1.0])
         decision = glb.step()                       # still operational
         assert decision is not None and decision.moves
         glb.finish()
-        assert glb.stats.syncs_total == 1
+        assert glb.stats.syncs_total == 2
 
 
 # ---------------------------------------------------------------------------
