@@ -1,0 +1,51 @@
+"""Correctness tooling for the window data plane.
+
+Two heads (ISSUE 8):
+
+* :mod:`repro.analysis.lint` — ``repro-lint``, an AST-based static pass
+  (stdlib ``ast``, zero dependencies) encoding the bug classes PRs 1–7
+  actually hit.  Run as ``python -m repro.analysis.lint src``.
+* :mod:`repro.analysis.sanitizer` — the runtime sanitizer: lockset +
+  happens-before race detection over DistCollection mutations versus
+  in-flight relocation windows, SPMD move-stream contract checking, and
+  per-window transport invariant assertions.  Enable with
+  ``REPRO_SANITIZE=1``, ``sanitize=True`` on ``CollectiveMoveManager``
+  / ``GLBConfig`` / ``run_multiprocess``, or
+  :func:`repro.analysis.sanitizer.enable`.
+
+Both submodules import only the standard library at module level, so
+``repro.core`` modules can import them eagerly without a cycle.
+"""
+from . import sanitizer
+from .sanitizer import (
+    DigestRing,
+    RelocationRaceError,
+    SanitizerError,
+    SPMDContractError,
+    TransportInvariantError,
+)
+
+__all__ = [
+    "sanitizer",
+    "Finding",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "DigestRing",
+    "SanitizerError",
+    "RelocationRaceError",
+    "SPMDContractError",
+    "TransportInvariantError",
+]
+
+_LINT_NAMES = ("Finding", "lint_file", "lint_paths", "lint_source",
+               "main", "RULES")
+
+
+def __getattr__(name):
+    # lazy: importing `.lint` here would trip runpy's double-import
+    # warning under `python -m repro.analysis.lint`
+    if name in _LINT_NAMES:
+        from . import lint
+        return getattr(lint, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

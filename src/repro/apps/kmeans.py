@@ -12,8 +12,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from ..core import (DistArray, DistArrayWorkload, GLBConfig,
-                    GlobalLoadBalancer, LongRange, PlaceGroup, local_reduce,
-                    team_reduce)
+                    GlobalLoadBalancer, LongRange, PlaceGroup, team_reduce)
 
 __all__ = ["AveragePosition", "ClosestPoint", "KMeans"]
 

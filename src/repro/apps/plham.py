@@ -15,7 +15,7 @@ wall-clock = Σ per-place max of (agent work / speed).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -21,10 +21,9 @@ import tempfile
 import time
 from pathlib import Path
 
-import jax
 import numpy as np
 
-from ..core import LongRange, RangeDistribution
+from ..core import RangeDistribution
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "CheckpointManager"]

@@ -23,7 +23,7 @@ batch-range reassignments (training data shards / serving caches).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -20,10 +20,11 @@ on first touch of a place, not at construction.
 from __future__ import annotations
 
 import threading
-from typing import Any, Callable, Iterable, Sequence
+from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from ..analysis import sanitizer as _san
 from .distribution import LongRange, RangeDistribution
 
 __all__ = [
@@ -515,6 +516,8 @@ class DistArray(DistCollection):
         return self.handle(place).get(idx)
 
     def set(self, place: int, idx: int, value) -> None:
+        if _san._ACTIVE:
+            _san.check_mutation(self, "set", idx)
         self.handle(place).set(idx, value)
 
     def ranges(self, place: int) -> list[LongRange]:
@@ -536,6 +539,8 @@ class DistArray(DistCollection):
     def map_chunks(self, place: int, fn: Callable[[np.ndarray], np.ndarray]) -> None:
         """`parallelForEach` analogue: fn is applied per chunk (the
         vectorized/thread-free TPU equivalent of per-thread scheduling)."""
+        if _san._ACTIVE:
+            _san.check_mutation(self, "map_chunks")
         h = self.handle(place)
         for r in list(h.chunks):
             h.chunks[r] = np.asarray(fn(h.chunks[r]))
@@ -570,6 +575,8 @@ class DistArray(DistCollection):
         :meth:`to_device` returned to verify the layout exactly: a
         relocation can swap equal-*sized* ranges, which a bare row-count
         check cannot see."""
+        if _san._ACTIVE:
+            _san.check_mutation(self, "from_device")
         h = self.handle(place)
         rows = np.asarray(rows)
         if len(rows) != h.size():
@@ -693,9 +700,13 @@ class DistBag(DistCollection):
         return []
 
     def put(self, place: int, item) -> None:
+        if _san._ACTIVE:
+            _san.check_mutation(self, "put")
         self.handle(place).append(np.asarray(item))
 
     def put_batch(self, place: int, items) -> None:
+        if _san._ACTIVE:
+            _san.check_mutation(self, "put_batch")
         self.handle(place).extend(np.asarray(x) for x in items)
 
     def local_size(self, place: int) -> int:
@@ -708,6 +719,8 @@ class DistBag(DistCollection):
         return list(self.handle(place))
 
     def clear(self, place: int) -> None:
+        if _san._ACTIVE:
+            _san.check_mutation(self, "clear")
         self.handle(place).clear()
 
     def move_at_sync_count(self, place: int, count: int, dest: int, mm) -> None:
@@ -790,6 +803,8 @@ class DistMap(DistCollection):
         return {}
 
     def put(self, place: int, key, value) -> None:
+        if _san._ACTIVE:
+            _san.check_mutation(self, "put", key)
         h = self.handle(place)
         if self.multi:
             h.setdefault(key, []).append(value)
@@ -821,6 +836,8 @@ class DistMap(DistCollection):
         Returns the number of bytes now device-resident."""
         import jax
 
+        if _san._ACTIVE:
+            _san.check_mutation(self, "to_device")
         h = self.handle(place)
         moved = 0
         for k in (list(h) if keys is None else keys):
@@ -838,6 +855,8 @@ class DistMap(DistCollection):
         numpy (checkpointing / inspection path).  Returns bytes moved."""
         import jax
 
+        if _san._ACTIVE:
+            _san.check_mutation(self, "from_device")
         h = self.handle(place)
         moved = 0
         for k in (list(h) if keys is None else keys):

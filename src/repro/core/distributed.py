@@ -44,6 +44,7 @@ from typing import Any, Callable, Sequence
 
 import numpy as np
 
+from ..analysis import sanitizer as _san
 from . import telemetry
 from .collections import PlaceGroup, lookup_collection
 from .transport import TransportStats, _account_exchange
@@ -93,10 +94,13 @@ class PipeBackend:
     One duplex pipe per rank pair; each pairwise handshake is ordered
     (the lower rank sends first, the higher recvs first) so a large
     message can never deadlock two ranks that both block in ``send``.
-    Every message carries ``(tag, payload)`` where ``tag`` is this
-    backend's collective sequence number — ranks that drift out of
-    program order (two threads racing collectives, a skipped sync)
-    raise instead of silently decoding the wrong window.
+    Every message carries ``(tag, kind, payload)`` where ``tag`` is
+    this backend's collective sequence number and ``kind`` names the
+    collective that issued it — ranks that drift out of program order
+    (two threads racing collectives, a skipped sync) raise with *what*
+    each rank was running plus this rank's recent-collective history
+    (the sanitizer's digest ring), instead of silently decoding the
+    wrong window.
     """
 
     def __init__(self, rank: int, world_size: int, conns: dict):
@@ -107,54 +111,69 @@ class PipeBackend:
         self._lock = threading.Lock()    # collectives serialize in-process
 
     # -- pairwise ordered exchange ---------------------------------------
-    def _swap(self, peer: int, obj: Any, tag: int) -> Any:
+    def _swap(self, peer: int, obj: Any, tag: int,
+              kind: str = "alltoall") -> Any:
         c = self._conns[peer]
         if self.rank < peer:
-            c.send((tag, obj))
-            rtag, got = c.recv()
+            c.send((tag, kind, obj))
+            rtag, rkind, got = c.recv()
         else:
-            rtag, got = c.recv()
-            c.send((tag, obj))
-        if rtag != tag:
+            rtag, rkind, got = c.recv()
+            c.send((tag, kind, obj))
+        if rtag != tag or rkind != kind:
+            # kind mismatch at an equal tag is the nastier drift: the
+            # old (tag, payload) wire silently decoded the wrong
+            # collective's bytes (e.g. one rank's barrier swapping with
+            # another's allgather)
             raise RuntimeError(
-                f"rank {self.rank} got collective #{rtag} from rank "
-                f"{peer} while running #{tag} — ranks out of program "
-                "order (collectives must be issued identically on "
-                "every rank)")
+                f"rank {self.rank} got collective #{rtag} ({rkind}) "
+                f"from rank {peer} while running #{tag} ({kind}) — "
+                "ranks out of program order (collectives must be "
+                "issued identically on every rank); recent collectives "
+                f"on rank {self.rank}: "
+                f"{_san.digest_ring().describe()}")
         return got
 
-    def alltoall(self, objs: Sequence[Any]) -> list:
+    def alltoall(self, objs: Sequence[Any], *,
+                 kind: str = "alltoall") -> list:
         if len(objs) != self.world_size:
             raise ValueError(
                 f"alltoall needs {self.world_size} entries, got {len(objs)}")
         with self._lock:
             tag = self._tag
             self._tag += 1
+            # always feed the diagnostic ring (one deque append): a tag
+            # mismatch names what *both* ranks were doing even when the
+            # run was not sanitized
+            _san.digest_ring().record(tag, kind)
             out = [None] * self.world_size
             out[self.rank] = objs[self.rank]
             for peer in range(self.world_size):
                 if peer != self.rank:
-                    out[peer] = self._swap(peer, objs[peer], tag)
+                    out[peer] = self._swap(peer, objs[peer], tag, kind)
             return out
 
     def allgather(self, obj: Any) -> list:
-        return self.alltoall([obj] * self.world_size)
+        return self.alltoall([obj] * self.world_size, kind="allgather")
 
     def allreduce_sum(self, arr) -> np.ndarray:
         arr = np.asarray(arr)
         out = np.zeros_like(arr)
-        for part in self.allgather(arr):
+        for part in self.alltoall([arr] * self.world_size,
+                                  kind="allreduce_sum"):
             out = out + np.asarray(part)
         return out
 
     def broadcast(self, obj: Any, root: int = 0) -> Any:
         # ride the same tagged alltoall so broadcasts stay in program
         # order with every other collective (N small control messages)
-        got = self.allgather(obj if self.rank == root else None)
+        got = self.alltoall(
+            [obj if self.rank == root else None] * self.world_size,
+            kind="broadcast")
         return got[root]
 
     def barrier(self) -> None:
-        self.allgather(None)
+        self.alltoall([None] * self.world_size, kind="barrier")
 
 
 _CURRENT_BACKEND: list = [None]
@@ -174,12 +193,16 @@ def _set_current_backend(backend) -> None:
 # The launcher
 # ---------------------------------------------------------------------------
 def _worker_main(fn, rank, world_size, conns, result_conn, args, kwargs,
-                 collect_trace=False):
+                 collect_trace=False, sanitize=False):
     """Spawn entry point (module-level so it pickles under spawn)."""
     backend = PipeBackend(rank, world_size, conns)
     _set_current_backend(backend)
     trace = None
     try:
+        if sanitize:
+            # full data-plane sanitizer in every rank (forces telemetry
+            # on — the span stream is its event source)
+            _san.enable(rank=rank)
         if collect_trace:
             # every record this rank emits is pid-tagged with its rank;
             # the shutdown allgather below then hands every rank the
@@ -208,7 +231,8 @@ def _worker_main(fn, rank, world_size, conns, result_conn, args, kwargs,
 
 def run_multiprocess(fn: Callable, nprocs: int, *args,
                      timeout: float = 180.0,
-                     collect_trace: bool = False, **kwargs):
+                     collect_trace: bool = False,
+                     sanitize: bool = False, **kwargs):
     """Run ``fn(backend, *args, **kwargs)`` SPMD on ``nprocs`` fresh OS
     processes (``spawn`` — no inherited JAX state) wired into a full
     pipe mesh; returns the per-rank results in rank order.
@@ -225,7 +249,12 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
     tags each record's ``pid``), merges all ranks' tracer buffers over
     the backend allgather at shutdown, and returns ``(results,
     timeline)`` — one rank-tagged list of trace-event records ready for
-    :func:`repro.core.telemetry.chrome_trace`."""
+    :func:`repro.core.telemetry.chrome_trace`.
+
+    ``sanitize=True`` enables the full relocation sanitizer
+    (:mod:`repro.analysis.sanitizer` — race detector, SPMD contract
+    checker, transport invariants) in every worker, same as setting
+    ``REPRO_SANITIZE=1`` in their environment."""
     if nprocs < 1:
         raise ValueError(f"nprocs must be >= 1, got {nprocs}")
     if nprocs == 1:
@@ -233,7 +262,10 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
         prev = current_backend()
         _set_current_backend(backend)
         was_enabled = telemetry.enabled()
-        if collect_trace and not was_enabled:
+        was_sanitizing = _san._ACTIVE
+        if sanitize and not was_sanitizing:
+            _san.enable(rank=0)
+        if collect_trace and not telemetry.enabled():
             telemetry.enable(rank=0)
         try:
             results = [fn(backend, *args, **kwargs)]
@@ -241,7 +273,9 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
                 return results, telemetry.allgather_spans(backend)
             return results
         finally:
-            if collect_trace and not was_enabled:
+            if sanitize and not was_sanitizing:
+                _san.disable()
+            if (collect_trace or sanitize) and not was_enabled:
                 telemetry.disable()
             _set_current_backend(prev)
 
@@ -260,7 +294,7 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
         parent_end, child_end = ctx.Pipe(duplex=False)
         p = ctx.Process(target=_worker_main,
                         args=(fn, r, nprocs, ends[r], child_end,
-                              args, kwargs, collect_trace),
+                              args, kwargs, collect_trace, sanitize),
                         daemon=True)
         p.start()
         child_end.close()

@@ -312,6 +312,10 @@ class GLBConfig:
     idle_threshold: int = 0      # idle when load <= this
     min_keep: int = 1            # victim never drops below this
     seed: int = 0
+    sanitize: bool = False       # enable the relocation sanitizer
+    #                              (repro.analysis.sanitizer) for this
+    #                              process: race detector + SPMD contract
+    #                              + transport invariants on every window
 
     def make_policy(self):
         if not isinstance(self.policy, str):
@@ -386,6 +390,12 @@ class GlobalLoadBalancer:
         self.group = group
         self.workload = workload
         self.cfg = config or GLBConfig()
+        if self.cfg.sanitize:
+            # process-wide switch: every migration window this balancer
+            # (or anything else in the process) launches is checked —
+            # managers constructed with sanitize=None inherit it
+            from ..analysis import sanitizer as _san
+            _san.enable()
         # device_loop: steal_loop() runs the jit-resident SPMD steal
         # (core/spmd_glb.py) instead of the host steal_pass loop
         self.device_loop = device_loop

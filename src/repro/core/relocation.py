@@ -35,14 +35,14 @@ from __future__ import annotations
 import itertools
 import threading
 import time
-from dataclasses import dataclass, field
-from functools import partial
+from dataclasses import dataclass
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import sanitizer as _san
 from ..compat import axis_size
 from . import telemetry
 from .collections import DistArray, DistBag, DistMap, PlaceGroup
@@ -100,12 +100,23 @@ class CollectiveMoveManager:
     any place of the group.
     """
 
-    def __init__(self, group: PlaceGroup, transport=None):
+    def __init__(self, group: PlaceGroup, transport=None, *,
+                 sanitize: bool | None = None):
         self.group = group
         # the Alltoallv back end: None/"host" = numpy loopback (verbatim
         # pass-through), "device" = codec + jitted masked all_to_all, or
         # any RelocationTransport instance (shared jit caches)
         self.transport = make_transport(transport)
+        # sanitize=None defers to the process-wide switch (REPRO_SANITIZE
+        # / repro.analysis.sanitizer.enable()); an explicit True turns
+        # the sanitizer on for the whole process — the race detector's
+        # mutation hooks are global, a per-manager subset would miss
+        # exactly the unsynchronized call sites it exists to catch
+        if sanitize is None:
+            sanitize = _san.active()
+        elif sanitize and not _san.active():
+            _san.enable()
+        self.sanitize = bool(sanitize)
         self._range_moves: list[_RangeMove] = []
         self._bag_moves: list[_BagMove] = []
         self._key_moves: list[_KeyMove] = []
@@ -479,6 +490,16 @@ class AsyncRelocation:
         # all tagged window=<id>) supersede these for timeline analysis,
         # but `overlapped` and the benchmarks keep reading them
         self.trace: dict[str, float] = {"t_submit": time.perf_counter()}
+        if telemetry.enabled():
+            # announce the window *before* phase 1 can run: the
+            # sanitizer's race detector opens its danger zone for the
+            # participating collections here, on the submitting thread,
+            # so a mutation racing even the first instants of
+            # extraction is already covered
+            gids = sorted({m.collection.global_id
+                           for group in moves for m in group})
+            telemetry.event("reloc.submit", window=self.window_id,
+                            gids=tuple(gids))
         self._thread = threading.Thread(
             target=self._run_phase1, args=(moves,), daemon=True)
         self._thread.start()
@@ -494,6 +515,15 @@ class AsyncRelocation:
             # only the counts exchange + extraction/packing
             if self._after is not None:
                 self._after._delivered.wait()
+            if self.manager.sanitize:
+                # SPMD contract check *before* extraction: allgather
+                # per-rank move-stream digests so divergence raises with
+                # a per-rank diff here instead of deadlocking (or tag-
+                # mismatching) inside the counts exchange.  Runs after
+                # the predecessor chain wait so the collective stays in
+                # program order with the predecessor's delivery.
+                _san.check_spmd_contract(self.manager.group, moves,
+                                         self.window_id)
             with telemetry.context(window=self.window_id), \
                     telemetry.span("reloc.phase1") as sp:
                 self._counts, self._payloads = self.manager._phase1(moves)
@@ -576,9 +606,18 @@ class AsyncRelocation:
             # it nests inside reloc.deliver and inherits the window tag
             with telemetry.context(window=self.window_id), \
                     telemetry.span("reloc.deliver") as sp:
+                if self.manager.sanitize:
+                    # before the transport consumes them: a broken codec
+                    # should fail the window, not corrupt the landing
+                    _san.check_codec_roundtrip(self._payloads,
+                                               self.window_id)
                 self._moved_bytes, self.transport_stats = \
                     self.manager._deliver_payloads(self._payloads,
                                                    self._counts)
+                if self.manager.sanitize:
+                    _san.check_commit_invariants(
+                        self.manager, self._counts, self._moved_bytes,
+                        self.window_id)
                 for col in self._update_dists:
                     col.update_dist()
                 if sp:

@@ -230,6 +230,10 @@ class Tracer:
         self._count = 0         # live records (<= capacity)
         self._lock = threading.Lock()
         self._tids: dict[int, int] = {}   # thread ident -> small ordinal
+        # record listeners (the relocation sanitizer's event source):
+        # called with the raw record tuple on the recording thread,
+        # after the ring write, outside the ring lock
+        self._listeners: list = []
 
     # -- recording ---------------------------------------------------------
     def span(self, name: str, **attrs):
@@ -267,6 +271,25 @@ class Tracer:
         else:
             self.dropped += 1   # overwrote the oldest record
         lock.release()
+        if self._listeners:
+            # outside the ring lock: a listener may read the tracer (or
+            # record) without deadlocking; listeners must not raise —
+            # _record runs inside Span.__exit__ on live window threads
+            for fn in tuple(self._listeners):
+                fn(rec)
+
+    def add_listener(self, fn) -> None:
+        """Register ``fn(record_tuple)`` to observe every record as it
+        is written (idempotent).  Records arrive as the raw storage
+        tuple ``(name, ph, ts, dur, ctx_attrs, attrs, rank, ident)`` on
+        the recording thread; listeners must be fast and must not
+        raise."""
+        if fn not in self._listeners:
+            self._listeners.append(fn)
+
+    def remove_listener(self, fn) -> None:
+        if fn in self._listeners:
+            self._listeners.remove(fn)
 
     # -- reading -----------------------------------------------------------
     def records(self) -> list[dict]:
@@ -514,7 +537,10 @@ def enable(*, rank: int | None = None,
     ``capacity`` resizes (and clears) the ring buffer."""
     global _ENABLED, _TRACER
     if capacity is not None and capacity != _TRACER.capacity:
-        _TRACER = Tracer(capacity=capacity, rank=_TRACER.rank)
+        replacement = Tracer(capacity=capacity, rank=_TRACER.rank)
+        # listeners (e.g. the relocation sanitizer) survive a resize
+        replacement._listeners = list(_TRACER._listeners)
+        _TRACER = replacement
     if rank is not None:
         _TRACER.rank = int(rank)
     _ENABLED = True

@@ -13,7 +13,6 @@ dataset download; a real deployment swaps ``TokenSource``.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterator
 
 import numpy as np
 

@@ -31,7 +31,6 @@ import traceback
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 
 from ..compat import set_mesh
 from jax.sharding import NamedSharding

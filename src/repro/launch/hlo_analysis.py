@@ -11,9 +11,8 @@ Hardware constants: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM,
 """
 from __future__ import annotations
 
-import json
 import re
-from dataclasses import asdict, dataclass, field
+from dataclasses import dataclass, field
 
 __all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
 

@@ -5,7 +5,6 @@ touches jax device state.
 """
 from __future__ import annotations
 
-import jax
 
 __all__ = ["make_production_mesh", "make_parallel"]
 

@@ -9,7 +9,6 @@ serving/cache.py — relocatable between replicas by the balancer.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

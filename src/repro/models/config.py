@@ -1,8 +1,7 @@
 """Model configuration schema for all assigned architectures."""
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 __all__ = ["ModelConfig", "LayerSlot"]

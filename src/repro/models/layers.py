@@ -8,7 +8,6 @@ without allocating.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,6 @@ Two execution modes:
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

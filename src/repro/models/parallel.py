@@ -8,7 +8,7 @@ GSPMD with sharding constraints.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 import jax

@@ -13,8 +13,7 @@ reduction over the model axis), sequence-parallel decode attention
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -22,12 +21,12 @@ from jax.sharding import PartitionSpec as P
 
 from ..compat import pcast_varying, shard_map
 
-from .attention import (attn_attend_cache, attn_decode,
-                        attn_decode_project, attn_forward, attn_init)
+from .attention import (attn_attend_cache, attn_decode_project, attn_forward,
+                        attn_init)
 from .config import LayerSlot, ModelConfig
 from .layers import dense, dense_init, embed_init, rmsnorm, rmsnorm_init, swiglu, swiglu_init
 from .moe import (expert_all_to_all, expert_replicated, mla_attend_cache,
-                  mla_decode, mla_decode_project, mla_forward, mla_init,
+                  mla_decode_project, mla_forward, mla_init,
                   moe_forward_dense, moe_init)
 from .parallel import Parallel, constrain
 from .rglru import rglru_block, rglru_block_init, rglru_block_step, rglru_empty_state

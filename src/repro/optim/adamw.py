@@ -10,7 +10,7 @@ optimizer state.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -18,14 +18,12 @@ collection substrate and testable on one host:
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
 
 import numpy as np
 
 from ..core import (CollectiveMoveManager, LevelExtremes, LoadBalancer,
-                    LongRange, PlaceGroup, Proportional, RangeDistribution)
+                    PlaceGroup, Proportional, RangeDistribution)
 
 __all__ = ["HeartbeatMonitor", "StragglerMitigator", "ElasticWorld",
            "FaultTolerantDriver", "rehome_dead_place"]

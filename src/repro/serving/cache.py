@@ -16,14 +16,14 @@ device buffers and relocation windows ship device shards.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional
+from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import numpy as np
 
 from ..core import (CollectiveMoveManager, DistIdMap, LevelExtremes,
-                    LoadBalancer, LongRange, PlaceGroup, RangeDistribution)
+                    LoadBalancer, PlaceGroup)
 
 __all__ = ["ServingPool", "Sequence", "SeqKV"]
 

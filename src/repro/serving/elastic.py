@@ -63,9 +63,15 @@ class ElasticServingDriver:
                  glb: GLBConfig | None = None, heartbeat_timeout: int = 2,
                  page_tokens: int = 16, traffic_ema: float = 0.5,
                  engine=None, admission: str = "traffic",
-                 transport=None):
+                 transport=None, sanitize: bool = False):
         if admission not in ("traffic", "count"):
             raise ValueError(f"unknown admission policy {admission!r}")
+        if sanitize:
+            # turn the relocation sanitizer on for every KV-migration
+            # window this driver launches (race detector guards the
+            # admit/retire vs in-flight-window interleavings)
+            from ..analysis import sanitizer as _san
+            _san.enable()
         self.group = PlaceGroup(n_replicas)
         self.slots = slots_per_replica
         self.engine = engine           # real data plane (serving.decode)

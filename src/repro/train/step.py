@@ -8,7 +8,6 @@ optimizer update as in paper §4.5).
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -20,7 +19,7 @@ from ..models import zoo
 from ..models.config import ModelConfig
 from ..models.parallel import Parallel
 from ..models.transformer import param_partition_specs
-from ..optim.adamw import AdamWConfig, adamw_init, adamw_update, opt_partition_specs
+from ..optim.adamw import AdamWConfig, adamw_update, opt_partition_specs
 
 __all__ = ["build_train_step", "train_state_shardings", "batch_sharding"]
 

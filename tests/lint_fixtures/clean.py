@@ -1,0 +1,61 @@
+"""Negative fixtures: the linter must report nothing for this file.
+
+Each function is the *correct* twin of a pattern flagged in
+``flagged.py`` — the linter earns its keep by telling them apart.
+Reference data, never imported.
+"""
+import time
+
+import jax
+
+
+def untraced_span(x):
+    # host effects outside traced code are exactly what telemetry is for
+    with telemetry.span("outer"):
+        t0 = time.time()
+        print("host", t0)
+    return x * 2
+
+
+@jax.jit
+def pure_traced(x):
+    return x * 2 + 1
+
+
+def collective_on_all_ranks(backend, group, obj):
+    # unconditional collectives: every rank issues the same sequence
+    got = backend.broadcast(obj)
+    backend.barrier()
+    # rank-conditioned *payload*, unconditional *call* — the SPMD idiom
+    contribution = obj if backend.rank == 0 else None
+    return backend.allgather(contribution), got
+
+
+def protocol_attribute(t):
+    # the sanctioned transport capability test
+    return bool(getattr(t, "device_plane", False))
+
+
+def window_reaches_barrier(mm):
+    h = mm.sync_async()
+    h.enqueue()
+    h.finish()
+    mm.sync_async().finish()   # chained: fine
+    return mm.sync_async()     # escapes to the caller: their problem
+
+
+def window_drained(mm):
+    mm.sync_async()   # noqa: RL004 — drained two lines later
+    mm.drain()
+
+
+def narrow_except():
+    try:
+        risky()
+    except (KeyError, ValueError):
+        pass
+
+
+def sorted_roundrobin(handles, dests):
+    return {k: dests[i % len(dests)]
+            for i, k in enumerate(sorted(handles.keys()))}

@@ -1,0 +1,61 @@
+"""Positive fixtures: every marked line must produce its RL00x finding.
+
+Lines carry ``# EXPECT: RL00x`` markers; the golden test in
+``test_analysis.py`` parses them and asserts the linter reports exactly
+those (file, line, code) triples.  This file is reference data — it is
+never imported (the names it uses do not need to resolve).
+"""
+import json                                      # EXPECT: RL007
+import time
+
+import jax
+
+
+@jax.jit
+def traced_span(x):
+    with telemetry.span("inner"):                # EXPECT: RL001
+        t0 = time.time()                         # EXPECT: RL001
+        print("tracing", t0)                     # EXPECT: RL001
+    return x * 2
+
+
+def traced_via_scan(xs):
+    def body(carry, x):
+        telemetry.event("step")                  # EXPECT: RL001
+        return carry + x, x
+
+    return jax.lax.scan(body, 0.0, xs)
+
+
+def rank_conditioned(backend, group, obj):
+    if backend.rank == 0:
+        backend.broadcast(obj)                   # EXPECT: RL002
+    while group.backend.rank != 1:
+        backend.barrier()                        # EXPECT: RL002
+    if backend.rank == 0:
+        pass  # collective in the *test* is fine, none in the body
+    return obj
+
+
+def transport_sniffing(t):
+    if isinstance(t, DeviceTransport):           # EXPECT: RL003
+        return True
+    return bool(getattr(t, "device_plane", False))
+
+
+def dropped_window(mm):
+    mm.sync_async()                              # EXPECT: RL004
+    h = mm.sync_async()                          # EXPECT: RL004
+    return None
+
+
+def swallow():
+    try:
+        risky()
+    except:                                      # EXPECT: RL005
+        pass
+
+
+def roundrobin_assign(handles, dests):
+    return {k: dests[i % len(dests)]
+            for i, k in enumerate(handles.keys())}   # EXPECT: RL006

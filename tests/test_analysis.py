@@ -1,0 +1,368 @@
+"""Correctness tooling (ISSUE 8): repro-lint rules + runtime sanitizer.
+
+Three layers:
+
+* golden-file lint fixtures — ``tests/lint_fixtures/flagged.py`` carries
+  ``# EXPECT: RL00x`` markers, ``clean.py`` is the negative twin;
+* the runtime sanitizer's three checkers, each against a *seeded* bug:
+  a mid-window unlocked ``DistIdMap`` mutation (race detector), a
+  2-process divergent move-stream registration (SPMD contract), and a
+  corrupted row codec (transport invariants);
+* the PipeBackend seq-tag diagnostics fed by the sanitizer digest ring.
+"""
+import re
+import threading
+
+import numpy as np
+import pytest
+
+from repro.analysis import lint
+from repro.analysis import sanitizer as san
+from repro.core import (CollectiveMoveManager, DistArray, DistBag,
+                        DistIdMap, PlaceGroup, ProcessPlaceGroup,
+                        run_multiprocess)
+from repro.core import telemetry
+from repro.core.collections import DistMap
+from repro.core.distribution import LongRange
+
+FIXTURES = "tests/lint_fixtures"
+
+
+# ---------------------------------------------------------------------------
+# repro-lint
+# ---------------------------------------------------------------------------
+def _expected(path):
+    exp = set()
+    with open(path) as f:
+        for i, line in enumerate(f, 1):
+            m = re.search(r"# EXPECT: (RL\d{3})", line)
+            if m:
+                exp.add((i, m.group(1)))
+    return exp
+
+
+class TestLintGolden:
+    def test_flagged_fixture_matches_expect_markers(self):
+        path = f"{FIXTURES}/flagged.py"
+        got = {(f.line, f.code) for f in lint.lint_file(path)}
+        assert got == _expected(path)
+
+    def test_clean_fixture_produces_no_findings(self):
+        assert lint.lint_file(f"{FIXTURES}/clean.py") == []
+
+    def test_src_tree_is_lint_clean(self):
+        # the CI gate, asserted in-repo: the linter ships green
+        assert lint.lint_paths(["src"]) == []
+
+
+class TestLintRules:
+    def test_string_annotation_counts_as_import_usage(self):
+        # `dests: "Sequence[int]"` resolves Sequence at get_type_hints
+        # time — removing the import as "dead" broke exactly that
+        src = ('from typing import Sequence\n'
+               'def f(dests: "Sequence[int]"):\n'
+               '    return dests\n')
+        assert lint.lint_source(src) == []
+
+    def test_unused_import_flagged(self):
+        out = lint.lint_source("import json\nx = 1\n")
+        assert [f.code for f in out] == ["RL007"]
+
+    def test_noqa_suppresses_all_and_by_code(self):
+        assert lint.lint_source("import json  # noqa\n") == []
+        assert lint.lint_source("import json  # noqa: RL007\n") == []
+        out = lint.lint_source("import json  # noqa: RL001\n")
+        assert [f.code for f in out] == ["RL007"]
+
+    def test_select_narrows_rules(self):
+        src = ("import json\n"
+               "try:\n    pass\nexcept:\n    pass\n")
+        out = lint.lint_source(src, select={"RL005"})
+        assert [f.code for f in out] == ["RL005"]
+
+    def test_github_format(self):
+        f = lint.lint_source("import json\n", path="x.py")[0]
+        assert f.github().startswith("::error file=x.py,line=1,")
+        assert "RL007" in f.github()
+
+
+class TestLintCLI:
+    def test_exit_codes(self, capsys):
+        assert lint.main([f"{FIXTURES}/clean.py"]) == 0
+        assert lint.main([f"{FIXTURES}/flagged.py"]) == 1
+        out = capsys.readouterr().out
+        assert "RL001" in out
+
+    def test_github_annotations(self, capsys):
+        rc = lint.main([f"{FIXTURES}/flagged.py", "--format=github"])
+        assert rc == 1
+        assert "::error file=" in capsys.readouterr().out
+
+    def test_list_rules(self, capsys):
+        assert lint.main(["--list-rules"]) == 0
+        assert "RL004" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------------------------
+# sanitizer plumbing
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def sanitized():
+    tel_was = telemetry.enabled()
+    san.enable()
+    try:
+        yield
+    finally:
+        san.disable()
+        if not tel_was:
+            telemetry.disable()
+
+
+class _Gate:
+    """Stand-in predecessor window: holds the chained window's phase 1
+    hostage until the test releases it — the deterministic way to keep
+    a window in flight while the test mutates a collection."""
+
+    finished = False
+
+    def __init__(self):
+        self._delivered = threading.Event()
+
+    def enqueue(self):
+        return self
+
+
+def _filled_idmap(g):
+    idm = DistIdMap(g)
+    for k in range(16):
+        idm.put(g.members[k % g.size()], k, np.arange(3.0) + k)
+    return idm
+
+
+class TestDigestRing:
+    def test_record_tail_describe(self):
+        ring = san.DigestRing(maxlen=4)
+        for i in range(6):
+            ring.record(i, "alltoall")
+        ring.record(6, "window", "abcd")
+        assert len(ring.tail(10)) == 4      # maxlen evicts the oldest
+        assert ring.tail(1) == [(6, "window", "abcd")]
+        assert "#6:window[abcd]" in ring.describe()
+        ring.clear()
+        assert ring.describe() == "none"
+
+
+class TestRaceDetector:
+    def test_seeded_midwindow_race_is_caught_and_named(self, sanitized):
+        g = PlaceGroup(4)
+        idm = _filled_idmap(g)
+        mm = CollectiveMoveManager(g)
+        assert mm.sanitize
+        moved = {0, 4, 8}
+        idm.move_at_sync(0, lambda k, m=moved: 2 if k in m else 0, mm)
+        gate = _Gate()
+        h = mm.sync_async(after=gate)   # in flight, phase 1 gated
+        try:
+            with pytest.raises(san.RelocationRaceError) as ei:
+                # the seeded bug: mutating through the *unlocked*
+                # parent-class path while the window is in flight
+                DistMap.put(idm, 1, 999, np.arange(3.0))
+            msg = str(ei.value)
+            assert f"DistIdMap#{idm.global_id}" in msg
+            assert "put(999)" in msg
+            assert f"window {h.window_id}" in msg
+            assert "_lock" in msg       # actionable: says what to hold
+        finally:
+            gate._delivered.set()
+            h.finish()
+
+    def test_locked_mutation_passes(self, sanitized):
+        g = PlaceGroup(4)
+        idm = _filled_idmap(g)
+        mm = CollectiveMoveManager(g)
+        idm.move_at_sync(0, lambda k: 2 if k < 4 else 0, mm)
+        gate = _Gate()
+        h = mm.sync_async(after=gate)
+        try:
+            idm.put(1, 999, np.arange(3.0))        # takes idm._lock
+            with idm._lock:                        # explicit lockset
+                DistMap.put(idm, 1, 998, np.arange(3.0))
+        finally:
+            gate._delivered.set()
+            h.finish()
+        assert idm.get(1, 999) is not None
+
+    def test_mutation_after_finish_passes(self, sanitized):
+        g = PlaceGroup(4)
+        idm = _filled_idmap(g)
+        mm = CollectiveMoveManager(g)
+        idm.move_at_sync(0, lambda k: 2 if k < 4 else 0, mm)
+        mm.sync()
+        DistMap.put(idm, 1, 999, np.arange(3.0))   # window closed: fine
+        assert san.window_report()["windows"] == {}
+
+    def test_sanitized_window_end_to_end_accounting(self, sanitized):
+        g = PlaceGroup(4)
+        col = DistArray(g)
+        for i, p in enumerate(g.members):
+            col.add_chunk(p, LongRange(i * 8, (i + 1) * 8),
+                          np.arange(i * 8.0, (i + 1) * 8.0).reshape(8, 1))
+        mm = CollectiveMoveManager(g)
+        col.move_range_at_sync(LongRange(0, 8), 2, mm)
+        mm.sync()
+        assert mm.last_counts_matrix.sum() == mm.last_payload_bytes
+        assert san.window_report()["by_collection"] == {}
+
+
+# ---------------------------------------------------------------------------
+# transport invariants
+# ---------------------------------------------------------------------------
+class _BrokenCodecBag(DistBag):
+    """Seeded codec drift: decode perturbs the first item, so
+    decode(encode(p)) re-encodes to different bytes."""
+
+    def decode_rows(self, rows, manifest):
+        out = super().decode_rows(rows, manifest)
+        if out:
+            out[0] = np.asarray(out[0]) + 1
+        return out
+
+
+class TestTransportInvariants:
+    def test_codec_roundtrip_drift_is_caught(self, sanitized,
+                                             monkeypatch):
+        # pin the spot-check cadence so this very window is sampled
+        monkeypatch.setattr(san, "_CODEC_SAMPLE_EVERY", 1)
+        g = PlaceGroup(2)
+        bag = _BrokenCodecBag(g)
+        for i in range(6):
+            bag.put(0, np.arange(4.0) + i)
+        mm = CollectiveMoveManager(g)
+        bag.move_at_sync_count(0, 3, 1, mm)
+        with pytest.raises(san.TransportInvariantError) as ei:
+            mm.sync()
+        assert f"_BrokenCodecBag#{bag.global_id}" in str(ei.value)
+        assert "round-trip" in str(ei.value)
+
+    def test_byte_accounting_mismatch_raises(self):
+        mm = CollectiveMoveManager(PlaceGroup(2))
+        counts = np.array([[0, 100], [0, 0]])
+        with pytest.raises(san.TransportInvariantError,
+                           match="payload was\n.*dropped|dropped"):
+            san.check_commit_invariants(mm, counts, 50, window_id=7)
+
+    def test_nonzero_diagonal_raises(self):
+        mm = CollectiveMoveManager(PlaceGroup(2))
+        counts = np.array([[5, 0], [0, 0]])
+        with pytest.raises(san.TransportInvariantError,
+                           match="diagonal"):
+            san.check_commit_invariants(mm, counts, 5, window_id=7)
+
+
+# ---------------------------------------------------------------------------
+# SPMD contract — 2 real processes
+# ---------------------------------------------------------------------------
+def _build_array(backend):
+    g = ProcessPlaceGroup(4, backend)
+    col = DistArray(g)
+    for i, p in enumerate(g.members):
+        if g.is_local(p):
+            col.add_chunk(p, LongRange(i * 8, (i + 1) * 8),
+                          np.arange(i * 8.0, (i + 1) * 8.0).reshape(8, 1))
+    return g, col
+
+
+def _divergent_worker(backend):
+    g, col = _build_array(backend)
+    mm = CollectiveMoveManager(g, transport="distributed")
+    # the seeded contract violation: ranks register different ranges
+    r = LongRange(0, 8) if backend.rank == 0 else LongRange(8, 16)
+    col.move_range_at_sync(r, 3, mm)
+    mm.sync()
+    return col.global_size()
+
+
+def _conforming_worker(backend):
+    g, col = _build_array(backend)
+    mm = CollectiveMoveManager(g, transport="distributed")
+    col.move_range_at_sync(LongRange(0, 8), 3, mm)   # same on every rank
+    mm.sync()
+    return col.global_size()
+
+
+def _kind_mismatch_worker(backend):
+    if backend.rank == 0:
+        backend.barrier()        # rank 1 never issues this collective
+    return backend.allgather(backend.rank)
+
+
+class TestSPMDContract:
+    def test_seeded_divergence_fails_with_per_rank_diff(self):
+        with pytest.raises(RuntimeError) as ei:
+            run_multiprocess(_divergent_worker, 2, sanitize=True,
+                             timeout=120.0)
+        msg = str(ei.value)
+        assert "SPMDContractError" in msg
+        assert "first divergence at move 0" in msg
+        # the offending registrations, range named per rank
+        assert "[0,8)" in msg and "[8,16)" in msg
+        assert "rank 0 registered" in msg
+
+    def test_conforming_registration_passes_sanitized(self):
+        out = run_multiprocess(_conforming_worker, 2, sanitize=True,
+                               timeout=120.0)
+        assert out == [8, 24]    # rank 1 hosts places 2,3 (8 + 16 rows)
+
+    def test_seq_tag_mismatch_names_both_operation_kinds(self):
+        with pytest.raises(RuntimeError) as ei:
+            run_multiprocess(_kind_mismatch_worker, 2, timeout=120.0)
+        msg = str(ei.value)
+        assert "barrier" in msg and "allgather" in msg
+        assert "recent collectives" in msg
+
+
+# ---------------------------------------------------------------------------
+# enable/disable plumbing
+# ---------------------------------------------------------------------------
+def _inline_worker(backend):
+    return san.active()
+
+
+class TestSanitizerSwitch:
+    def test_run_multiprocess_inline_enables_and_restores(
+            self, monkeypatch):
+        # the suite itself may run under REPRO_SANITIZE=1 (CI's
+        # sanitized rerun); pin the env switch off so this test
+        # observes only the explicit sanitize= plumbing
+        monkeypatch.setattr(san, "_ENV_FLAG", False)
+        san.disable()
+        assert not san._ACTIVE
+        out = run_multiprocess(_inline_worker, 1, sanitize=True)
+        assert out == [True]
+        assert not san._ACTIVE   # restored after the inline run
+
+    def test_manager_explicit_flag_enables_globally(self):
+        tel_was = telemetry.enabled()
+        try:
+            mm = CollectiveMoveManager(PlaceGroup(2), sanitize=True)
+            assert mm.sanitize and san.active()
+        finally:
+            san.disable()
+            if not tel_was:
+                telemetry.disable()
+
+    def test_glb_config_carries_sanitize_field(self):
+        from repro.core import GLBConfig
+        cfg = GLBConfig(sanitize=True)
+        assert cfg.sanitize
+        try:
+            from repro.core.glb import (DistArrayWorkload,
+                                        GlobalLoadBalancer)
+            g = PlaceGroup(4)
+            col = DistArray(g)
+            col.add_chunk(0, LongRange(0, 8), np.zeros((8, 1)))
+            GlobalLoadBalancer(g, DistArrayWorkload(col), cfg)
+            assert san.active()
+        finally:
+            san.disable()
+            telemetry.disable()
