@@ -529,6 +529,53 @@ def bench_reloc_distributed(processes, smoke=False):
         f"bitwise_parity=1;serving_shapes=1")
 
 
+FAILOVER_PLACES = 6
+
+
+def _failover_bench_worker(backend, entries, width):
+    """Survivor side of the ``reloc_failover_mp`` row (spawn target).
+
+    Replicated init (every rank materializes every place's chunk) is the
+    redundancy contract recovery consumes; the chaos plan kills rank 2
+    right after the first window's phase-1 counts allreduce, so the
+    survivors hit the death mid-window and must detect, roll back,
+    re-home, and finish without the dead peer."""
+    from repro.core import (CollectiveMoveManager, DistArray,
+                            DistributedTransport, LongRange,
+                            PeerFailedError, ProcessPlaceGroup)
+    from repro.runtime import recover_dead_ranks
+
+    g = ProcessPlaceGroup(FAILOVER_PLACES, backend)
+    rows = np.arange(entries * width,
+                     dtype=np.float64).reshape(entries, width)
+    col = DistArray(g, track=True)
+    for p, r in enumerate(LongRange(0, entries).split(FAILOVER_PLACES)):
+        col.add_chunk(p, r, rows[r.start:r.end])
+    transport = DistributedTransport()
+    mm = CollectiveMoveManager(g, transport=transport)
+    mm.register_range_move(
+        col, LongRange(0, entries // FAILOVER_PLACES), 2)
+    t0 = time.perf_counter()
+    try:
+        mm.sync()
+        return {"failed": False}
+    except PeerFailedError as e:
+        detect_s = time.perf_counter() - t0
+        err = {"rank": e.rank, "op": e.op, "seq": e.seq}
+    mm.abort_inflight()
+    t1 = time.perf_counter()
+    new_g, stats = recover_dead_ranks(g, [col], transport=transport)
+    recovery_s = time.perf_counter() - t1
+    local = int(sum(col.local_size(p) for p in new_g.local_places()))
+    total = int(backend.allreduce_sum(np.int64(local)))
+    return {"failed": True, "err": err, "detect_s": detect_s,
+            "recovery_s": recovery_s,
+            "rehomed": int(sum(stats["rehomed"].values())),
+            "unrecovered": stats["unrecovered"],
+            "dead_ranks": stats["dead_ranks"],
+            "total_after": total}
+
+
 def bench_relocation(only=None, smoke=False, processes=1):
     from repro.core import (CollectiveMoveManager, DistArray, DistIdMap,
                             LongRange, PlaceGroup)
@@ -798,6 +845,51 @@ def bench_relocation(only=None, smoke=False, processes=1):
             f"unsanitized_us={san_off:.0f};ratio_x={san_ratio:.3f}")
         if processes > 1:
             bench_reloc_distributed(processes, smoke=smoke)
+
+    if not only or "reloc_failover_mp" in only:
+        # ISSUE 9 acceptance: a chaos plan crashes one of three OS
+        # processes between a relocation window's phase-1 counts and its
+        # phase-2 delivery.  Survivors must raise PeerFailedError (no
+        # hang past the collective deadline), roll the window back,
+        # re-home every dead-rank entry from their replicas, and finish
+        # degraded — zero lost entries, bounded time-to-recovery.
+        from repro.core import run_multiprocess
+        from repro.runtime.chaos import FaultPlan
+        entries, width = (600, 4) if smoke else (2400, 8)
+        plan = FaultPlan.crash_after(2, kind="allreduce_sum", nth=0)
+        t0 = time.perf_counter()
+        results = run_multiprocess(
+            _failover_bench_worker, 3, entries, width, chaos=plan,
+            collective_timeout=20.0, recover=True, timeout=240.0)
+        wall_s = time.perf_counter() - t0
+        assert results[2] is None, "chaos plan failed to kill rank 2"
+        survivors = [r for r in results if r is not None]
+        assert len(survivors) == 2
+        ranges = LongRange(0, entries).split(FAILOVER_PLACES)
+        expect_rehomed = sum(r.end - r.start for r in ranges[4:])
+        for res in survivors:
+            assert res["failed"], "survivor never saw the peer failure"
+            assert res["err"]["rank"] == 2 and res["err"]["op"], \
+                f"error does not name the dead peer: {res['err']}"
+            assert res["dead_ranks"] == (2,)
+            # zero lost entries: both dead places fully re-homed and the
+            # global entry count conserved across crash + recovery
+            assert res["unrecovered"] == ()
+            assert res["rehomed"] == expect_rehomed
+            assert res["total_after"] == entries
+        detect_s = max(res["detect_s"] for res in survivors)
+        recovery_s = max(res["recovery_s"] for res in survivors)
+        # bounded time-to-recovery: detection is EOF-driven (never the
+        # 20 s deadline) and recovery is a handful of small collectives
+        # plus local inserts — well under the deadline even on CI
+        assert detect_s + recovery_s < 10.0, \
+            f"time-to-recovery unbounded: detect {detect_s:.1f}s + " \
+            f"recover {recovery_s:.1f}s"
+        row("reloc_failover_mp", recovery_s * 1e6,
+            f"detect_ms={detect_s * 1e3:.1f};"
+            f"recovery_ms={recovery_s * 1e3:.1f};wall_s={wall_s:.1f};"
+            f"dead_ranks=1;rehomed={expect_rehomed};lost=0;"
+            f"entries={entries}")
 
 
 def bench_kernels():

@@ -34,6 +34,11 @@ RL006  ``enumerate(<x>.keys())`` / ``enumerate(<x>.items())`` feeding a
        first (the ``register_drain`` round-robin bug class).
 RL007  unused module-level import (dead imports accumulate fast in a
        codebase grown one PR at a time).
+RL008  bare ``Connection.recv()`` with no ``poll(timeout)`` anywhere in
+       the same scope: a peer that dies mid-collective leaves the
+       caller blocked forever (the hang the deadline-aware
+       ``PipeBackend._recv`` exists to prevent) — poll with a timeout
+       and treat expiry/EOF as peer failure.
 
 Suppression: add ``# noqa`` (optionally ``# noqa: RL00x``) or
 ``# repro-lint: ok`` on the flagged line.
@@ -63,6 +68,8 @@ RULES = {
     "RL006": "enumerate over dict-ordered keys()/items() feeding "
              "relocation (sort first)",
     "RL007": "unused module-level import",
+    "RL008": "bare Connection.recv() without a poll(timeout) guard in "
+             "scope",
 }
 
 # RL001: names that must not be called from traced code
@@ -209,6 +216,7 @@ class _FileChecker:
         self.check_bare_except()
         self.check_dict_order_roundrobin()
         self.check_unused_imports()
+        self.check_bare_recv()
         return self.findings
 
     # -- RL001 -------------------------------------------------------------
@@ -445,6 +453,37 @@ class _FileChecker:
             if name not in used:
                 self.flag(node, "RL007",
                           f"`{name}` is imported but never used")
+
+    # -- RL008 -------------------------------------------------------------
+    def check_bare_recv(self) -> None:
+        """Flag ``<x>.recv()`` calls in any scope that never calls
+        ``<y>.poll(<timeout>)``: with nothing bounding the wait, a dead
+        peer blocks the caller forever.  Scope-level, not dataflow —
+        one guarded poll in the function is taken as evidence the
+        author bounded the wait (the ``PipeBackend._recv`` pattern)."""
+        scopes = [n for n in ast.walk(self.tree)
+                  if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+        scopes.append(self.tree)  # module level
+        for fn in scopes:
+            body_nodes = self._scope_nodes(fn)
+            has_poll = any(
+                isinstance(n, ast.Call)
+                and isinstance(n.func, ast.Attribute)
+                and n.func.attr == "poll"
+                and (n.args or n.keywords)
+                for n in body_nodes)
+            if has_poll:
+                continue
+            for node in body_nodes:
+                if isinstance(node, ast.Call) \
+                        and isinstance(node.func, ast.Attribute) \
+                        and node.func.attr == "recv" \
+                        and not node.args and not node.keywords:
+                    self.flag(node, "RL008",
+                              "bare .recv() with no poll(timeout) in "
+                              "scope: a dead peer blocks this call "
+                              "forever — poll with a deadline first and "
+                              "treat expiry/EOF as peer failure")
 
 
 # ---------------------------------------------------------------------------

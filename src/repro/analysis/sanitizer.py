@@ -346,7 +346,9 @@ def check_spmd_contract(group, moves, window_id) -> None:
     digest = _digest(descs)
     _RING.record(window_id, "window", digest)
     gathered = backend.allgather((digest, descs[:_MAX_DIFF_DESCS]))
-    if len({d for d, _ in gathered}) <= 1:
+    gathered = [g if g is not None else ("<dead rank>", [])
+                for g in gathered]   # dead ranks can't diverge
+    if len({d for d, _ in gathered if d != "<dead rank>"}) <= 1:
         return
     me = backend.rank
     lines = [

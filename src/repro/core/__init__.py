@@ -19,6 +19,7 @@ from .collections import (
 from .distributed import (
     DistributedTransport,
     LocalBackend,
+    PeerFailedError,
     PipeBackend,
     ProcessPlaceGroup,
     current_backend,
@@ -76,7 +77,8 @@ __all__ = [
     "BalanceDecision", "LevelExtremes", "LoadBalancer", "Proportional",
     "CachableArray", "CachableChunkedList", "DistArray", "DistBag",
     "DistIdMap", "DistMap", "DistMultiMap", "PlaceGroup",
-    "DistributedTransport", "LocalBackend", "PipeBackend",
+    "DistributedTransport", "LocalBackend", "PeerFailedError",
+    "PipeBackend",
     "ProcessPlaceGroup", "current_backend", "run_multiprocess",
     "DistributionDelta", "LongRange", "RangeDistribution",
     "ClusterSim", "DistArrayWorkload", "GLBConfig", "GLBStats",

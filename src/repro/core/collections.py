@@ -630,7 +630,8 @@ class DistArray(DistCollection):
                 # reconcile the same collections in the same order)
                 merged: dict = {}
                 for part in self.group.backend.allgather(local):
-                    merged.update(part)
+                    if part is not None:   # dead ranks contribute nothing
+                        merged.update(part)
                 local = merged
             for p, ranges in local.items():
                 for r in ranges:
@@ -972,7 +973,8 @@ class DistIdMap(DistMap):
             if self.group.process_backed:
                 merged: dict = {}
                 for part in self.group.backend.allgather(local):
-                    merged.update(part)
+                    if part is not None:   # dead ranks contribute nothing
+                        merged.update(part)
                 local = merged
             for p, keys in local.items():
                 for k in keys:

@@ -38,7 +38,9 @@ owning ``src`` extracts).  ``sync()`` is collective.
 from __future__ import annotations
 
 import itertools
+import os
 import threading
+import time
 import traceback
 from typing import Any, Callable, Sequence
 
@@ -51,12 +53,57 @@ from .transport import TransportStats, _account_exchange
 
 __all__ = [
     "LocalBackend",
+    "PeerFailedError",
     "PipeBackend",
     "run_multiprocess",
     "current_backend",
     "ProcessPlaceGroup",
     "DistributedTransport",
 ]
+
+# control-message kinds on the pipe wire (never collide with collective
+# kinds, which are plain identifiers)
+_ABORT_KIND = "__abort__"
+_RESYNC_KIND = "__resync__"
+
+# per-collective deadline: how long a rank waits for any single peer
+# message before declaring the peer failed.  Well under the launcher's
+# 180 s timeout so survivors always report before the parent gives up.
+_DEFAULT_COLLECTIVE_TIMEOUT = 30.0
+
+
+def _collective_timeout_default() -> float:
+    try:
+        return float(os.environ.get("REPRO_COLLECTIVE_TIMEOUT",
+                                    _DEFAULT_COLLECTIVE_TIMEOUT))
+    except ValueError:
+        return _DEFAULT_COLLECTIVE_TIMEOUT
+
+
+class PeerFailedError(RuntimeError):
+    """A peer rank died (closed pipe) or blew the collective deadline.
+
+    Carries the failure coordinates — ``rank`` (the dead peer), ``op``
+    (the collective kind this rank was running), ``seq`` (its sequence
+    tag) — and renders them with the sanitizer digest-ring tail, so a
+    mid-window death reads as *which* rank failed *where* instead of a
+    180 s launcher timeout.  Survivors recover by rolling back the
+    in-flight window (automatic), then calling
+    :func:`repro.runtime.fault_tolerance.recover_dead_ranks` — which is
+    collective: every survivor must run it."""
+
+    def __init__(self, rank: int, op: str, seq: int, detail: str = ""):
+        self.rank = int(rank)
+        self.op = op
+        self.seq = int(seq)
+        self.detail = detail
+        msg = (f"peer rank {rank} failed during collective #{seq} ({op})"
+               + (f": {detail}" if detail else "")
+               + f"; recent collectives: {_san.digest_ring().describe()}")
+        super().__init__(msg)
+
+    def __reduce__(self):
+        return (type(self), (self.rank, self.op, self.seq, self.detail))
 
 
 # ---------------------------------------------------------------------------
@@ -69,6 +116,7 @@ class LocalBackend:
 
     rank = 0
     world_size = 1
+    chaos = None
 
     def alltoall(self, objs: Sequence[Any]) -> list:
         if len(objs) != 1:
@@ -87,6 +135,15 @@ class LocalBackend:
     def barrier(self) -> None:
         pass
 
+    def dead_ranks(self) -> frozenset:
+        return frozenset()
+
+    def live_ranks(self) -> tuple:
+        return (0,)
+
+    def resync(self) -> None:
+        pass
+
 
 class PipeBackend:
     """Full-mesh ``multiprocessing.connection`` backend.
@@ -101,25 +158,135 @@ class PipeBackend:
     each rank was running plus this rank's recent-collective history
     (the sanitizer's digest ring), instead of silently decoding the
     wrong window.
+
+    Collectives are deadline-aware: every receive polls with bounded
+    backoff up to ``collective_timeout`` seconds (default 30, or
+    ``REPRO_COLLECTIVE_TIMEOUT``), so transient peer slowness rides out
+    for free while a closed pipe (peer process death) or a blown
+    deadline raises :class:`PeerFailedError` naming the dead rank, the
+    op kind and the seq tag — no survivor ever blocks to the launcher
+    timeout.  A rank that detects a death mid-collective aborts the
+    collective on every live peer (an out-of-band abort token), so the
+    failure surfaces on all survivors within one deadline.  After
+    catching it, survivors run :meth:`resync` (collective over the live
+    mesh) to flush stale messages and agree on the dead set + the next
+    sequence tag; collectives thereafter skip dead peers (their slots
+    come back ``None``) and the program continues degraded.
     """
 
-    def __init__(self, rank: int, world_size: int, conns: dict):
+    def __init__(self, rank: int, world_size: int, conns: dict, *,
+                 collective_timeout: float | None = None, chaos=None):
         self.rank = int(rank)
         self.world_size = int(world_size)
         self._conns = conns              # peer rank -> Connection
         self._tag = 0
         self._lock = threading.Lock()    # collectives serialize in-process
+        self.collective_timeout = (_collective_timeout_default()
+                                   if collective_timeout is None
+                                   else float(collective_timeout))
+        self.chaos = chaos               # ChaosEngine or None
+        self._dead: set[int] = set()
+        # resync tokens that arrived early (a peer entered recovery
+        # while we were still swapping): consumed by resync()
+        self._stash: dict[int, Any] = {}
+
+    # -- liveness ---------------------------------------------------------
+    def dead_ranks(self) -> frozenset:
+        return frozenset(self._dead)
+
+    def live_ranks(self) -> tuple:
+        return tuple(r for r in range(self.world_size)
+                     if r not in self._dead)
+
+    def _mark_dead(self, peer: int, op: str, seq: int) -> None:
+        if peer in self._dead:
+            return
+        self._dead.add(peer)
+        if telemetry.enabled():
+            telemetry.inc("fault.peer_failed")
+            telemetry.event("fault.peer_failed", peer=int(peer), op=op,
+                            seq=int(seq), rank=self.rank)
+
+    # -- deadline-aware wire ----------------------------------------------
+    def _send(self, peer: int, msg: tuple, op: str, seq: int) -> None:
+        try:
+            self._conns[peer].send(msg)
+        except (BrokenPipeError, OSError):
+            self._mark_dead(peer, op, seq)
+            raise PeerFailedError(peer, op, seq,
+                                  detail="pipe closed while sending "
+                                         "(peer process died)")
+
+    def _recv(self, peer: int, op: str, seq: int) -> tuple:
+        """One deadline-bounded receive: poll with exponential backoff
+        until a message lands; EOF/closed pipe is peer death, deadline
+        expiry is a suspected death (hang or drift) — both raise
+        :class:`PeerFailedError` instead of blocking forever."""
+        c = self._conns[peer]
+        deadline = time.monotonic() + self.collective_timeout
+        wait = 0.0005
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                self._mark_dead(peer, op, seq)
+                raise PeerFailedError(
+                    peer, op, seq,
+                    detail=f"no message within the "
+                           f"{self.collective_timeout:.1f}s collective "
+                           "deadline (peer hung, died, or fell out of "
+                           "program order)")
+            try:
+                if c.poll(min(wait, remaining)):
+                    return c.recv()
+            except (EOFError, OSError):
+                self._mark_dead(peer, op, seq)
+                raise PeerFailedError(peer, op, seq,
+                                      detail="pipe closed (peer process "
+                                             "died)")
+            wait = min(wait * 2, 0.05)   # bounded retry backoff
+
+    def _abort_peers(self, tag: int, kind: str) -> None:
+        """Best-effort: tell every live peer this collective is aborted
+        (they may be blocked waiting for us or for the dead rank) so the
+        failure surfaces everywhere within one deadline, not N."""
+        token = (tag, _ABORT_KIND, tuple(sorted(self._dead)))
+        for peer in range(self.world_size):
+            if peer == self.rank or peer in self._dead:
+                continue
+            try:
+                self._conns[peer].send(token)
+            except (BrokenPipeError, OSError):
+                self._mark_dead(peer, kind, tag)
 
     # -- pairwise ordered exchange ---------------------------------------
     def _swap(self, peer: int, obj: Any, tag: int,
               kind: str = "alltoall") -> Any:
-        c = self._conns[peer]
         if self.rank < peer:
-            c.send((tag, kind, obj))
-            rtag, rkind, got = c.recv()
+            self._send(peer, (tag, kind, obj), kind, tag)
+            rtag, rkind, got = self._recv(peer, kind, tag)
         else:
-            rtag, rkind, got = c.recv()
-            c.send((tag, kind, obj))
+            rtag, rkind, got = self._recv(peer, kind, tag)
+            self._send(peer, (tag, kind, obj), kind, tag)
+        if rkind == _ABORT_KIND:
+            # the peer detected a death mid-collective and aborted:
+            # adopt its dead set and surface the same failure here
+            self._dead.update(got)
+            dead = min(got) if got else peer
+            raise PeerFailedError(
+                dead, kind, tag,
+                detail=f"collective aborted by rank {peer} after it "
+                       f"detected dead rank(s) {sorted(got) or [peer]}")
+        if rkind == _RESYNC_KIND:
+            # the peer already entered recovery; keep its token for our
+            # own resync() and report the failure it is recovering from
+            self._stash[peer] = got
+            dead_set = got[0]
+            self._dead.update(dead_set)
+            dead = min(dead_set) if dead_set else peer
+            raise PeerFailedError(
+                dead, kind, tag,
+                detail=f"rank {peer} is resyncing after dead rank(s) "
+                       f"{sorted(dead_set) or [peer]}")
         if rtag != tag or rkind != kind:
             # kind mismatch at an equal tag is the nastier drift: the
             # old (tag, payload) wire silently decoded the wrong
@@ -146,14 +313,24 @@ class PipeBackend:
             # mismatch names what *both* ranks were doing even when the
             # run was not sanitized
             _san.digest_ring().record(tag, kind)
+            if self.chaos is not None:
+                self.chaos.on_collective("before", tag, kind)
             out = [None] * self.world_size
             out[self.rank] = objs[self.rank]
-            for peer in range(self.world_size):
-                if peer != self.rank:
+            try:
+                for peer in range(self.world_size):
+                    if peer == self.rank or peer in self._dead:
+                        continue
                     out[peer] = self._swap(peer, objs[peer], tag, kind)
+            except PeerFailedError:
+                self._abort_peers(tag, kind)
+                raise
+            if self.chaos is not None:
+                self.chaos.on_collective("after", tag, kind)
             return out
 
     def allgather(self, obj: Any) -> list:
+        """Gathered list in rank order; dead ranks' slots are ``None``."""
         return self.alltoall([obj] * self.world_size, kind="allgather")
 
     def allreduce_sum(self, arr) -> np.ndarray:
@@ -161,12 +338,15 @@ class PipeBackend:
         out = np.zeros_like(arr)
         for part in self.alltoall([arr] * self.world_size,
                                   kind="allreduce_sum"):
-            out = out + np.asarray(part)
+            if part is not None:    # dead ranks contribute zero
+                out = out + np.asarray(part)
         return out
 
     def broadcast(self, obj: Any, root: int = 0) -> Any:
         # ride the same tagged alltoall so broadcasts stay in program
         # order with every other collective (N small control messages)
+        if root in self._dead:
+            raise ValueError(f"broadcast root rank {root} is dead")
         got = self.alltoall(
             [obj if self.rank == root else None] * self.world_size,
             kind="broadcast")
@@ -174,6 +354,75 @@ class PipeBackend:
 
     def barrier(self) -> None:
         self.alltoall([None] * self.world_size, kind="barrier")
+
+    # -- post-failure resynchronization -----------------------------------
+    def _drain_until_resync(self, peer: int):
+        """Discard the peer's stale in-flight messages (aborted-swap
+        payloads, abort tokens) until its resync token arrives — FIFO
+        pipes guarantee everything the peer sent before entering
+        resync() is consumed here.  Returns the token payload, or
+        ``None`` when the peer itself died."""
+        c = self._conns[peer]
+        deadline = time.monotonic() + self.collective_timeout
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                self._mark_dead(peer, _RESYNC_KIND, self._tag)
+                return None
+            try:
+                if not c.poll(min(0.01, remaining)):
+                    continue
+                _rtag, rkind, payload = c.recv()
+            except (EOFError, OSError):
+                self._mark_dead(peer, _RESYNC_KIND, self._tag)
+                return None
+            if rkind == _RESYNC_KIND:
+                return payload
+            if rkind == _ABORT_KIND:
+                self._dead.update(payload)
+            # anything else is a stale swap payload of an aborted
+            # collective: drop it
+
+    def resync(self) -> None:
+        """Collective over the survivors after a
+        :class:`PeerFailedError`: flush every stale in-flight message,
+        agree on the union dead set, and re-align the collective
+        sequence tag (survivors may have failed at different seqs when
+        the dead rank's last sends were partially buffered).  Every
+        survivor must call this before issuing further collectives —
+        :func:`repro.runtime.fault_tolerance.recover_dead_ranks` does.
+
+        Best-effort under cascading failures: a rank that dies *during*
+        resync is added to the dead set; if survivors then disagree on
+        the tag, the next collective raises and recovery re-enters."""
+        with self._lock:
+            token = (tuple(sorted(self._dead)), self._tag)
+            for peer in range(self.world_size):
+                if peer == self.rank or peer in self._dead:
+                    continue
+                try:
+                    self._conns[peer].send(
+                        (self._tag, _RESYNC_KIND, token))
+                except (BrokenPipeError, OSError):
+                    self._mark_dead(peer, _RESYNC_KIND, self._tag)
+            tags = [self._tag]
+            for peer in range(self.world_size):
+                if peer == self.rank or peer in self._dead:
+                    continue
+                payload = self._stash.pop(peer, None)
+                if payload is None:
+                    payload = self._drain_until_resync(peer)
+                if payload is None:
+                    continue    # peer died during resync
+                dead_set, ptag = payload
+                self._dead.update(dead_set)
+                tags.append(int(ptag))
+            self._stash.clear()
+            self._tag = max(tags) + 1
+            if telemetry.enabled():
+                telemetry.event("recover.resync", rank=self.rank,
+                                dead=tuple(sorted(self._dead)),
+                                tag=self._tag)
 
 
 _CURRENT_BACKEND: list = [None]
@@ -192,10 +441,32 @@ def _set_current_backend(backend) -> None:
 # ---------------------------------------------------------------------------
 # The launcher
 # ---------------------------------------------------------------------------
+def _load_chaos_engine(rank: int, chaos_json: str | None):
+    """Build this rank's ChaosEngine from the launcher-shipped plan (or
+    the REPRO_CHAOS env var) and install it process-wide.  Lazy import:
+    ``repro.runtime`` depends on ``repro.core``, never the reverse at
+    module scope."""
+    if not chaos_json and not os.environ.get("REPRO_CHAOS"):
+        return None
+    from ..runtime import chaos as _chaos
+
+    plan = (_chaos.FaultPlan.from_json(chaos_json) if chaos_json
+            else _chaos.plan_from_env())
+    if plan is None or not plan.faults:
+        return None
+    engine = _chaos.ChaosEngine(plan, rank)
+    _chaos.install(engine)
+    return engine
+
+
 def _worker_main(fn, rank, world_size, conns, result_conn, args, kwargs,
-                 collect_trace=False, sanitize=False):
+                 collect_trace=False, sanitize=False, chaos_json=None,
+                 collective_timeout=None):
     """Spawn entry point (module-level so it pickles under spawn)."""
-    backend = PipeBackend(rank, world_size, conns)
+    engine = _load_chaos_engine(rank, chaos_json)
+    backend = PipeBackend(rank, world_size, conns,
+                          collective_timeout=collective_timeout,
+                          chaos=engine)
     _set_current_backend(backend)
     trace = None
     try:
@@ -232,7 +503,10 @@ def _worker_main(fn, rank, world_size, conns, result_conn, args, kwargs,
 def run_multiprocess(fn: Callable, nprocs: int, *args,
                      timeout: float = 180.0,
                      collect_trace: bool = False,
-                     sanitize: bool = False, **kwargs):
+                     sanitize: bool = False,
+                     chaos=None,
+                     collective_timeout: float | None = None,
+                     recover: bool = False, **kwargs):
     """Run ``fn(backend, *args, **kwargs)`` SPMD on ``nprocs`` fresh OS
     processes (``spawn`` — no inherited JAX state) wired into a full
     pipe mesh; returns the per-rank results in rank order.
@@ -254,15 +528,36 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
     ``sanitize=True`` enables the full relocation sanitizer
     (:mod:`repro.analysis.sanitizer` — race detector, SPMD contract
     checker, transport invariants) in every worker, same as setting
-    ``REPRO_SANITIZE=1`` in their environment."""
+    ``REPRO_SANITIZE=1`` in their environment.
+
+    ``chaos`` ships a :class:`repro.runtime.chaos.FaultPlan` (or its
+    JSON) to every worker — deterministic fault injection at the
+    backend/transport seams; the ``REPRO_CHAOS`` env var is the
+    equivalent out-of-band channel.  ``collective_timeout`` overrides
+    each worker's per-collective deadline (``REPRO_COLLECTIVE_TIMEOUT``,
+    default 30 s).
+
+    ``recover=True`` is the supervised recovery mode: a rank that dies
+    without reporting (crashed, killed, or chaos-crashed) no longer
+    fails the whole run as long as at least one survivor returns a
+    result — dead ranks' slots come back ``None``.  Workers are
+    expected to handle :class:`PeerFailedError` by running
+    :func:`repro.runtime.fault_tolerance.recover_dead_ranks` and
+    continuing degraded; a survivor that *raises* still fails the run
+    with its traceback."""
     if nprocs < 1:
         raise ValueError(f"nprocs must be >= 1, got {nprocs}")
+    chaos_json = None
+    if chaos is not None:
+        chaos_json = chaos.to_json() if hasattr(chaos, "to_json") else chaos
     if nprocs == 1:
         backend = LocalBackend()
         prev = current_backend()
         _set_current_backend(backend)
         was_enabled = telemetry.enabled()
         was_sanitizing = _san._ACTIVE
+        engine = _load_chaos_engine(0, chaos_json)
+        backend.chaos = engine
         if sanitize and not was_sanitizing:
             _san.enable(rank=0)
         if collect_trace and not telemetry.enabled():
@@ -277,6 +572,9 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
                 _san.disable()
             if (collect_trace or sanitize) and not was_enabled:
                 telemetry.disable()
+            if engine is not None:
+                from ..runtime import chaos as _chaos
+                _chaos.clear()
             _set_current_backend(prev)
 
     import multiprocessing as mp
@@ -294,7 +592,8 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
         parent_end, child_end = ctx.Pipe(duplex=False)
         p = ctx.Process(target=_worker_main,
                         args=(fn, r, nprocs, ends[r], child_end,
-                              args, kwargs, collect_trace, sanitize),
+                              args, kwargs, collect_trace, sanitize,
+                              chaos_json, collective_timeout),
                         daemon=True)
         p.start()
         child_end.close()
@@ -304,24 +603,29 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
         result_conns.append(parent_end)
 
     results: list = [None] * nprocs
-    errors: list[str] = []
+    # survivor tracebacks always fail the run; deaths (no result, EOF)
+    # are tolerated in recovery mode when any rank reported back
+    fatal: list[str] = []
+    deaths: list[str] = []
+    ok_count = 0
     timeline: list | None = None
+    exit_codes: dict[int, Any] = {}
     try:
         for r, conn in enumerate(result_conns):
             if not conn.poll(timeout):
-                errors.append(f"rank {r}: no result within {timeout}s")
+                deaths.append(f"rank {r}: no result within {timeout}s")
                 continue
             try:
                 status, value, trace = conn.recv()
             except EOFError:
-                errors.append(
-                    f"rank {r}: died without reporting "
-                    f"(exit code {procs[r].exitcode}); if launching from "
-                    f"a script, run_multiprocess must be called under "
-                    f"`if __name__ == \"__main__\":` (spawn re-imports "
-                    f"the main module in every child)")
+                deaths.append(
+                    f"rank {r}: died without reporting; if launching "
+                    f"from a script, run_multiprocess must be called "
+                    f"under `if __name__ == \"__main__\":` (spawn "
+                    f"re-imports the main module in every child)")
                 continue
             if status == "ok":
+                ok_count += 1
                 results[r] = value
                 # the shutdown allgather handed every rank the same
                 # merged timeline; keep the first (longest, if a peer
@@ -330,17 +634,27 @@ def run_multiprocess(fn: Callable, nprocs: int, *args,
                                           or len(trace) > len(timeline)):
                     timeline = trace
             else:
-                errors.append(f"rank {r} failed:\n{value}")
+                fatal.append(f"rank {r} failed:\n{value}")
     finally:
-        for p in procs:
+        for r, p in enumerate(procs):
+            # escalating reap: join → terminate → kill, so a hung or
+            # crashed worker can never linger as a zombie past the call
             p.join(timeout=10.0)
             if p.is_alive():
                 p.terminate()
+                p.join(timeout=5.0)
+            if p.is_alive():
+                p.kill()
                 p.join()
+            exit_codes[r] = p.exitcode
         for conn in result_conns:
             conn.close()
-    if errors:
-        raise RuntimeError("run_multiprocess: " + "\n".join(errors))
+    if fatal or (deaths and not (recover and ok_count > 0)):
+        codes = ", ".join(f"rank {r}: {c}"
+                          for r, c in sorted(exit_codes.items()))
+        raise RuntimeError(
+            "run_multiprocess: " + "\n".join(fatal + deaths)
+            + f"\nper-rank exit codes: {{{codes}}}")
     if collect_trace:
         return results, (timeline or [])
     return results
@@ -405,7 +719,8 @@ class ProcessPlaceGroup(PlaceGroup):
         claims = [int(c) for c in claims]
         if not self.process_backed:
             return claims
-        gathered = self.backend.allgather(claims)
+        gathered = [c for c in self.backend.allgather(claims)
+                    if c is not None]   # dead ranks contribute nothing
         if len({len(c) for c in gathered}) > 1:
             raise RuntimeError(
                 "range moves must be registered on every rank, in the "
@@ -626,6 +941,9 @@ class DistributedTransport:
                                  wire_rows, manifest))
 
         if W > 1:
+            chaos = getattr(backend, "chaos", None)
+            if chaos is not None:
+                outgoing = chaos.corrupt_outgoing(outgoing)
             incoming = None
             if self._device_wire_ready(backend):
                 incoming = self._exchange_rows_device(backend, outgoing)
@@ -633,7 +951,7 @@ class DistributedTransport:
                 incoming = backend.alltoall(outgoing)
             stats.exchanges += 1
             for sr in range(W):
-                if sr == me:
+                if sr == me or incoming[sr] is None:
                     continue
                 for gid, src, dest, rows, manifest in incoming[sr]:
                     col = lookup_collection(gid)

@@ -267,6 +267,28 @@ class CollectiveMoveManager:
         while self._inflight:
             self._inflight.pop(0).finish()
 
+    def abort_inflight(self) -> list[BaseException]:
+        """Tear down every in-flight window after a peer failure.
+
+        Each window's ``finish()`` barrier is driven to completion —
+        rolled-back windows re-raise their failure here — and the
+        errors are *collected* rather than propagated, so recovery
+        (:func:`repro.runtime.fault_tolerance.recover_dead_ranks`) can
+        quiesce the manager without losing the first error it already
+        holds.  Phase-1 and delivery rollbacks have re-inserted every
+        extracted payload at its source by the time this returns."""
+        errors: list[BaseException] = []
+        while self._inflight:
+            try:
+                self._inflight.pop(0).finish()
+            except BaseException as e:
+                errors.append(e)
+        self._range_moves = []
+        self._array_count_moves = []
+        self._bag_moves = []
+        self._key_moves = []
+        return errors
+
     def _phase1(self, moves) -> tuple[np.ndarray, list]:
         """Counts Alltoall + payload packing (runs off-thread under
         :meth:`sync_async`).  Extraction happens here: entries leave the
@@ -413,8 +435,17 @@ class CollectiveMoveManager:
         background delivery thread — insertion takes each collection's
         lock so it never races a successor window's extraction).
         Returns the off-place payload bytes + the window's wire stats."""
-        delivered, tstats = self.transport.exchange(self.group, counts,
-                                                    payloads)
+        try:
+            delivered, tstats = self.transport.exchange(self.group, counts,
+                                                        payloads)
+        except BaseException:
+            # the exchange failed before any insertion happened (a peer
+            # died mid-Alltoallv, a codec blew up): re-home every
+            # extracted payload at its source so global_size() is
+            # conserved across the failed window — the delivery-stage
+            # twin of the _phase1 rollback
+            self._rollback_payloads(payloads)
+            raise
         moved_bytes = 0
         for col, src, dest, payload in delivered:
             # one accounting walk per payload: the alias-aware dedup

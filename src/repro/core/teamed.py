@@ -131,6 +131,8 @@ def allgather1(group: PlaceGroup, values: Sequence[float]) -> np.ndarray:
     if group.process_backed:
         merged = np.zeros(group.size(), dtype=np.float64)
         for r, vec in enumerate(group.backend.allgather(out)):
+            if vec is None:    # dead rank: its places keep the caller's
+                continue       # local value (stale, but never a crash)
             for i, p in enumerate(group.members):
                 if group.rank_of(p) == r:
                     merged[i] = vec[i]

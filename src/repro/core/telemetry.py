@@ -665,7 +665,8 @@ def allgather_spans(backend) -> list[dict]:
     rank returns the same sorted list."""
     merged: list[dict] = []
     for part in backend.allgather(_TRACER.records()):
-        merged.extend(part)
+        if part is not None:   # dead ranks contribute nothing
+            merged.extend(part)
     merged.sort(key=lambda r: r.get("ts", 0.0))
     return merged
 

@@ -1,1 +1,3 @@
+from . import chaos  # noqa: F401
+from .chaos import ChaosEngine, Fault, FaultPlan  # noqa: F401
 from .fault_tolerance import *  # noqa: F401,F403

@@ -1,0 +1,277 @@
+"""Deterministic fault injection for the multi-process data plane.
+
+A :class:`FaultPlan` is a small, JSON-serializable script of faults —
+crash a rank at a given collective, delay its messages, corrupt payload
+bytes on the wire, suppress its heartbeats — that the launcher ships to
+every worker (explicit ``run_multiprocess(chaos=...)`` argument or the
+``REPRO_CHAOS`` environment variable).  Workers install a per-rank
+:class:`ChaosEngine`; the production seams — ``PipeBackend``'s tagged
+collectives and ``DistributedTransport``'s row encoding — consult it
+through tiny hooks that cost one attribute check when no plan is
+installed.  There is no test-only fork of the data plane: chaos runs
+the exact code paths production runs, which is what makes the
+failure-detection and recovery guarantees provable.
+
+Fault vocabulary (``Fault.op``):
+
+``crash``
+    ``os._exit`` on ``rank`` at a deterministic collective seam:
+    ``at_seq`` pins the backend's collective sequence tag, or
+    ``kind``/``nth`` pins the nth collective of a kind (``when`` is
+    ``"before"`` or ``"after"`` the collective completes).  ``nth``
+    counts per-kind when ``kind`` is set, else over all collectives.
+    Crashing *after* the nth ``allreduce_sum`` lands exactly between a
+    relocation window's phase-1 counts and its phase-2 delivery.
+``delay``
+    sleep ``seconds`` on ``rank`` before it sends its part of the
+    matched collective — transient slowness that the deadline/retry
+    path must ride out (or, past the deadline, report as a suspected
+    peer death).
+``corrupt``
+    flip bits in the encoded payload rows of ``rank``'s ``nth``
+    transport exchange (the §5.3 Alltoallv wire) — data-plane
+    corruption for testing end-to-end integrity checks.
+``suppress_heartbeats``
+    ``heartbeat_suppressed(rank)`` turns true so liveness feeds
+    (:func:`repro.runtime.fault_tolerance.feed_process_liveness`) stop
+    beating the rank's places — a live process that *looks* dead, the
+    false-positive half of failure detection.
+
+All matching is deterministic — no clocks, no randomness — so a chaos
+run is exactly reproducible and usable as a regression test.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Sequence
+
+__all__ = ["Fault", "FaultPlan", "ChaosEngine", "install", "current",
+           "clear", "plan_from_env", "ENV_VAR"]
+
+ENV_VAR = "REPRO_CHAOS"
+
+_OPS = ("crash", "delay", "corrupt", "suppress_heartbeats")
+
+
+@dataclass(frozen=True)
+class Fault:
+    """One scripted fault.  Unset selectors match anything."""
+
+    op: str                      # crash | delay | corrupt | suppress_heartbeats
+    rank: int                    # the rank the fault fires on
+    when: str = "before"        # crash/delay: before | after the collective
+    at_seq: int | None = None    # match a specific collective sequence tag
+    kind: str | None = None      # match a collective kind (allreduce_sum, ...)
+    nth: int | None = None       # match the nth occurrence (per kind if set)
+    seconds: float = 0.0         # delay duration
+    byte: int = 0xFF             # corrupt: XOR mask applied to payload bytes
+
+    def __post_init__(self):
+        if self.op not in _OPS:
+            raise ValueError(f"unknown fault op {self.op!r}; one of {_OPS}")
+        if self.when not in ("before", "after"):
+            raise ValueError(f"when must be 'before' or 'after', "
+                             f"got {self.when!r}")
+
+    def to_dict(self) -> dict:
+        d = {"op": self.op, "rank": int(self.rank)}
+        if self.when != "before":
+            d["when"] = self.when
+        for key in ("at_seq", "kind", "nth"):
+            v = getattr(self, key)
+            if v is not None:
+                d[key] = v
+        if self.seconds:
+            d["seconds"] = float(self.seconds)
+        if self.byte != 0xFF:
+            d["byte"] = int(self.byte)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Fault":
+        return cls(**d)
+
+
+@dataclass
+class FaultPlan:
+    """An ordered script of :class:`Fault`\\ s, serializable through the
+    launcher (picklable, JSON round-trippable, env-var shippable)."""
+
+    faults: tuple = ()
+    name: str = ""
+
+    def __post_init__(self):
+        self.faults = tuple(
+            f if isinstance(f, Fault) else Fault.from_dict(dict(f))
+            for f in self.faults)
+
+    # -- serialization ----------------------------------------------------
+    def to_json(self) -> str:
+        doc: dict = {"faults": [f.to_dict() for f in self.faults]}
+        if self.name:
+            doc["name"] = self.name
+        return json.dumps(doc)
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        doc = json.loads(text)
+        if isinstance(doc, list):   # bare fault list is accepted too
+            doc = {"faults": doc}
+        return cls(faults=tuple(Fault.from_dict(d)
+                                for d in doc.get("faults", ())),
+                   name=doc.get("name", ""))
+
+    @classmethod
+    def crash_after(cls, rank: int, *, kind: str | None = None,
+                    nth: int = 0, at_seq: int | None = None) -> "FaultPlan":
+        """Convenience: crash ``rank`` right after it completes the
+        ``nth`` collective of ``kind`` (or collective ``at_seq``) — e.g.
+        ``kind="allreduce_sum"`` dies between a window's phase-1 counts
+        and its phase-2 payload delivery."""
+        return cls(faults=(Fault("crash", rank, when="after", kind=kind,
+                                 nth=None if at_seq is not None else nth,
+                                 at_seq=at_seq),))
+
+
+def plan_from_env(environ=None) -> FaultPlan | None:
+    """Parse ``REPRO_CHAOS`` — inline JSON, or ``@/path/to/plan.json``."""
+    raw = (environ or os.environ).get(ENV_VAR, "").strip()
+    if not raw:
+        return None
+    if raw.startswith("@"):
+        with open(raw[1:], encoding="utf-8") as f:
+            raw = f.read()
+    return FaultPlan.from_json(raw)
+
+
+class ChaosEngine:
+    """Per-rank fault interpreter, installed by the launcher and
+    consulted by the data-plane seams.
+
+    The engine is deliberately dumb: it counts collectives (globally and
+    per kind) and transport exchanges, matches the plan's selectors, and
+    fires.  Every fault fires at most once (its slot is consumed), so a
+    matched ``delay`` does not re-trigger on retries.
+    """
+
+    def __init__(self, plan: FaultPlan, rank: int, *,
+                 exit_fn=os._exit, sleep_fn=time.sleep):
+        self.plan = plan
+        self.rank = int(rank)
+        self._exit = exit_fn
+        self._sleep = sleep_fn
+        self._kind_counts: dict[str, int] = {}
+        self._seen = 0
+        self._exchanges = 0
+        self._fired: set[int] = set()
+        self.fired_log: list[tuple] = []
+
+    # -- matching ---------------------------------------------------------
+    def _match(self, ops: Sequence[str], when: str, seq: int, kind: str,
+               n_all: int, n_kind: int):
+        for i, f in enumerate(self.plan.faults):
+            if i in self._fired or f.op not in ops or f.rank != self.rank:
+                continue
+            if f.when != when:
+                continue
+            if f.at_seq is not None and f.at_seq != seq:
+                continue
+            if f.kind is not None and f.kind != kind:
+                continue
+            if f.nth is not None \
+                    and f.nth != (n_kind if f.kind is not None else n_all):
+                continue
+            yield i, f
+
+    def _fire(self, i: int, f: Fault, seq: int, kind: str) -> None:
+        self._fired.add(i)
+        self.fired_log.append((f.op, seq, kind))
+        if f.op == "delay":
+            self._sleep(f.seconds)
+        elif f.op == "crash":
+            # hard death, bypassing atexit/finally — the peer sees EOF
+            # on the pipe, exactly like an OOM-killed or segfaulted rank
+            self._exit(75)
+
+    # -- PipeBackend seam -------------------------------------------------
+    def on_collective(self, when: str, seq: int, kind: str) -> None:
+        """Called by the backend before/after each collective it issues.
+        ``before`` runs ahead of this rank's first send for the
+        collective; ``after`` runs once the collective completed."""
+        n_all, n_kind = self._seen, self._kind_counts.get(kind, 0)
+        for i, f in self._match(("crash", "delay"), when, seq, kind,
+                                n_all, n_kind):
+            self._fire(i, f, seq, kind)
+        if when == "after":
+            self._seen += 1
+            self._kind_counts[kind] = n_kind + 1
+
+    # -- DistributedTransport seam ---------------------------------------
+    def corrupt_outgoing(self, outgoing):
+        """Called once per transport exchange with this rank's outgoing
+        wire entries (``outgoing[dest_rank]`` = list of ``(gid, src,
+        dest, rows, manifest)``); returns them, with the payload rows of
+        a matched ``corrupt`` fault bit-flipped."""
+        n = self._exchanges
+        self._exchanges += 1
+        masks = []
+        for i, f in self._match(("corrupt",), "before", -1, "exchange",
+                                n, n):
+            self._fired.add(i)
+            self.fired_log.append(("corrupt", n, "exchange"))
+            masks.append(f.byte)
+        if not masks:
+            return outgoing
+        out = []
+        for entries in outgoing:
+            flipped = []
+            for gid, src, dest, rows, manifest in entries:
+                for mask in masks:
+                    rows = _flip_bytes(rows, mask)
+                flipped.append((gid, src, dest, rows, manifest))
+            out.append(flipped)
+        return out
+
+    # -- liveness seam ----------------------------------------------------
+    def heartbeat_suppressed(self, rank: int | None = None) -> bool:
+        r = self.rank if rank is None else int(rank)
+        return any(f.op == "suppress_heartbeats" and f.rank == r
+                   for f in self.plan.faults)
+
+
+def _flip_bytes(rows, mask: int):
+    """XOR the first byte of every wire row with ``mask`` (enough to
+    break any codec round-trip while keeping shapes intact)."""
+    import numpy as np
+
+    def flip(a):
+        a = np.array(a, dtype=np.uint8, copy=True)
+        if a.size:
+            a.reshape(-1)[0] ^= mask
+        return a
+
+    if isinstance(rows, np.ndarray):
+        return flip(rows)
+    return [flip(r) for r in rows]
+
+
+# Process-wide installation point.  ``core.distributed`` cannot import
+# this module at top level (core must not depend on runtime), so the
+# launcher installs the engine here *and* pins it on the backend; the
+# transport reaches it through ``backend.chaos``.
+_CURRENT: list = [None]
+
+
+def install(engine: ChaosEngine | None) -> None:
+    _CURRENT[0] = engine
+
+
+def current() -> ChaosEngine | None:
+    return _CURRENT[0]
+
+
+def clear() -> None:
+    _CURRENT[0] = None

@@ -18,15 +18,58 @@ collection substrate and testable on one host:
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 
 import numpy as np
 
-from ..core import (CollectiveMoveManager, LevelExtremes, LoadBalancer,
-                    PlaceGroup, Proportional, RangeDistribution)
+from ..core import (CollectiveMoveManager, DistArray, DistMap,
+                    LevelExtremes, LoadBalancer, LongRange, PlaceGroup,
+                    ProcessPlaceGroup, Proportional, RangeDistribution,
+                    telemetry)
 
 __all__ = ["HeartbeatMonitor", "StragglerMitigator", "ElasticWorld",
-           "FaultTolerantDriver", "rehome_dead_place"]
+           "FaultTolerantDriver", "rehome_dead_place",
+           "recover_dead_ranks", "feed_process_liveness"]
+
+
+def _spmd_register_drain(mm, col, src: int, dests, group) -> int:
+    """Drain registration on a process-backed group.
+
+    Non-owner ranks cannot introspect ``src``'s holdings (they may hold
+    no replica, or a stale one), but the SPMD window contract requires
+    every rank to register the identical move stream.  The owning rank
+    broadcasts a holdings summary — sorted keys for keyed collections,
+    a count for arrays/bags — and every rank registers the same moves;
+    only the owner extracts (phase 1's ``is_local`` guard)."""
+    backend = group.backend
+    root = group.rank_of(src)
+    me = backend.rank
+    if isinstance(col, DistMap):
+        keys = None
+        if me == root:
+            try:
+                keys = sorted(col.keys(src))
+            except TypeError:
+                keys = list(col.keys(src))
+        keys = backend.broadcast(keys, root=root)
+        if not keys:
+            return 0
+        assign = {k: dests[i % len(dests)] for i, k in enumerate(keys)}
+        mm.register_key_moves(col, src, lambda k: assign.get(k, src))
+        return len(keys)
+    total = backend.broadcast(
+        int(col.local_size(src)) if me == root else None, root=root)
+    share, rem = divmod(total, len(dests))
+    for i, d in enumerate(dests):
+        n = share + (1 if i < rem else 0)
+        if n <= 0:
+            continue
+        if isinstance(col, DistArray):
+            mm.register_array_count_move(col, src, n, d)
+        else:
+            mm.register_bag_move(col, src, n, d)
+    return total
 
 
 def rehome_dead_place(group: PlaceGroup, dead: int, collections,
@@ -39,21 +82,169 @@ def rehome_dead_place(group: PlaceGroup, dead: int, collections,
     This is the failure half of the ROADMAP's fault-tolerant-GLB item:
     heartbeats detect the death, :meth:`GlobalLoadBalancer.evict_place`
     removes it from the lifeline graph, and this function gives its
-    entries a new home via the relocation engine."""
+    entries a new home via the relocation engine.
+
+    On a process-backed group ``dead`` must already be owned by a *live*
+    rank (the adopter — see :func:`recover_dead_ranks`); that rank's
+    holdings summary is broadcast so every rank registers the identical
+    move stream (the SPMD window contract)."""
     dests = [p for p in (dests if dests is not None else group.members)
              if p != dead and p in group]
     # the re-homing window rides the same relocation data plane as the
     # regular migrations (``transport=`` from the driver/GLB)
     mm = CollectiveMoveManager(group, transport=transport)
     moved = 0
+    process_backed = getattr(group, "process_backed", False)
     for col in collections:
-        moved += mm.register_drain(col, dead, dests)
+        if process_backed:
+            moved += _spmd_register_drain(mm, col, dead, dests, group)
+        else:
+            moved += mm.register_drain(col, dead, dests)
     if mm.pending():
         mm.sync()
     for col in collections:
         if hasattr(col, "update_dist") and getattr(col, "track", True):
             col.update_dist()
     return moved
+
+
+def feed_process_liveness(monitor: "HeartbeatMonitor", group,
+                          *, chaos=None) -> list[int]:
+    """Feed a :class:`HeartbeatMonitor` from *real* process liveness:
+    beat every place whose owning rank the backend still considers
+    live, tick once, and return the newly-dead places.  ``chaos`` (a
+    :class:`repro.runtime.chaos.ChaosEngine`) can suppress a rank's
+    heartbeats — a live process that *looks* dead, for testing the
+    false-positive half of failure detection."""
+    backend = getattr(group, "backend", None)
+    live = (set(backend.live_ranks()) if backend is not None
+            else {0})
+    rank_of = getattr(group, "rank_of", lambda p: 0)
+    for p in group.members:
+        r = rank_of(p)
+        if r not in live:
+            continue
+        if chaos is not None and chaos.heartbeat_suppressed(r):
+            continue
+        monitor.beat(p)
+    return monitor.tick()
+
+
+def recover_dead_ranks(group, collections, *, transport=None,
+                       monitor=None, glb=None):
+    """Survivor-side recovery after a :class:`~repro.core.distributed.
+    PeerFailedError`: rebuild the place group over the live ranks and
+    re-home every dead-rank entry the survivors hold, conserving the
+    global entry count.
+
+    Must be called collectively by every survivor, with any in-flight
+    windows quiesced first (:meth:`CollectiveMoveManager.abort_inflight`
+    — the phase-1/delivery rollbacks have already re-inserted extracted
+    payloads at their sources).  The steps:
+
+    1. ``backend.resync()`` — survivors agree on the dead-rank set and
+       a common collective sequence tag (stale in-flight messages are
+       drained).
+    2. *Adopter election*: each survivor reports how many entries it
+       holds for each dead place (replicas from an SPMD-deterministic
+       init, or entries delivered before the crash); the rank holding
+       the most adopts (ties → lowest rank).  Only adopted entries can
+       be re-homed — a dead place nobody holds a replica of is recorded
+       in ``stats["unrecovered"]`` rather than silently dropped.
+    3. An *interim* group reassigns dead places to their adopters, and
+       :func:`rehome_dead_place` drains each one onto the live places
+       through the normal relocation window.
+    4. The final group is the subgroup over live-rank places; each
+       collection drops dead-place handles and stale non-local replicas
+       and reconciles its distribution.
+
+    Returns ``(new_group, stats)`` where ``stats`` carries
+    ``dead_ranks``, ``dead_places``, ``adopters``, ``rehomed`` (per
+    place), ``unrecovered``, ``totals`` (per-collection global entry
+    counts after recovery, allreduced over survivors), and
+    ``elapsed_s``."""
+    backend = group.backend
+    t0 = time.perf_counter()
+    with telemetry.span("recover.ranks", rank=backend.rank):
+        backend.resync()
+        dead_rset = set(backend.dead_ranks())
+        dead_places = [p for p in group.members
+                       if group.rank_of(p) in dead_rset]
+        live_places = [p for p in group.members
+                       if group.rank_of(p) not in dead_rset]
+        if not live_places:
+            raise RuntimeError("recover_dead_ranks: no surviving places")
+        stats = {"dead_ranks": tuple(sorted(dead_rset)),
+                 "dead_places": tuple(dead_places),
+                 "adopters": {}, "rehomed": {}, "unrecovered": (),
+                 "totals": {}}
+        if not dead_places:
+            stats["elapsed_s"] = time.perf_counter() - t0
+            return group, stats
+
+        # adopter election: who holds the most entries of each dead
+        # place (warm replicas / pre-crash deliveries) adopts it
+        mine = {p: int(sum(int(col.local_size(p)) for col in collections))
+                for p in dead_places}
+        gathered = backend.allgather(mine)
+        adopters, unrecovered = {}, []
+        for p in dead_places:
+            best_r, best_n = None, -1
+            for r, held in enumerate(gathered):
+                if held is None:
+                    continue   # dead ranks report nothing
+                n = held.get(p, 0)
+                if n > best_n:
+                    best_r, best_n = r, n
+            if best_n <= 0:
+                unrecovered.append(p)
+            else:
+                adopters[p] = best_r
+        stats["adopters"] = dict(adopters)
+        stats["unrecovered"] = tuple(unrecovered)
+
+        # interim group: dead places reassigned to their adopters so the
+        # drain window has a live owner to extract from
+        place_ranks = {p: adopters.get(p, group.rank_of(p))
+                       for p in group.members}
+        interim = ProcessPlaceGroup(
+            len(group.members), backend,
+            place_ranks=place_ranks, members=group.members)
+        for col in collections:
+            col.group = interim
+        for p in sorted(adopters):
+            stats["rehomed"][p] = rehome_dead_place(
+                interim, p, collections, dests=live_places,
+                transport=transport)
+
+        final = interim.subgroup(live_places)
+        for ci, col in enumerate(collections):
+            col.group = final
+            # drop dead-place handles and stale non-local replicas:
+            # after recovery each rank holds exactly the places it owns
+            for p in list(col._handles):
+                if p not in final or not final.is_local(p):
+                    col._handles.pop(p, None)
+            if hasattr(col, "update_dist") and getattr(col, "track", True):
+                col.update_dist()
+            stats["totals"][ci] = int(backend.allreduce_sum(
+                np.asarray(sum(int(col.local_size(p))
+                               for p in final.local_places()),
+                           dtype=np.int64)))
+
+        if monitor is not None:
+            monitor.dead.update(dead_places)
+        if glb is not None:
+            for p in dead_places:
+                glb.evict_place(p)
+        if telemetry.enabled():
+            telemetry.inc("recover.rehomed_entries",
+                          sum(stats["rehomed"].values()))
+            telemetry.event("recover.done", rank=backend.rank,
+                            dead_ranks=stats["dead_ranks"],
+                            rehomed=sum(stats["rehomed"].values()))
+    stats["elapsed_s"] = time.perf_counter() - t0
+    return final, stats
 
 
 class HeartbeatMonitor:
@@ -132,29 +323,43 @@ class ElasticWorld:
         return new_group
 
     def resize(self, new_size: int, collections) -> PlaceGroup:
+        """Grow/shrink to ``new_size`` places, re-partitioning every
+        tracked collection to the block distribution over the new group
+        — through the relocation engine: one collective window carries
+        all collections (paper Listing 12), so the re-partition rides
+        the same data plane (and transport accounting) as every other
+        migration instead of a host-side array rebuild."""
         old = self.group
         new_group = PlaceGroup(new_size)
+        # registration/extraction run over the union of old and new
+        # places — the larger group — so shrink drains vanishing places
+        # and grow can deliver to places that do not exist yet in `old`
+        big = old if old.size() >= new_size else new_group
+        mm = CollectiveMoveManager(big)
         for col in collections:
             total = col.global_size()
             target = RangeDistribution.block(total, new_size)
-            # one collective relocation moves every entry to its new owner
-            mm = CollectiveMoveManager(old if old.size() >= new_size
-                                       else new_group)
-            # host model: rebuild by ranges
-            col.group = new_group
-            all_rows = []
+            col.group = big
+            # each held chunk splits across the new owners' block ranges
             for p in old.members:
-                if p in col._handles:
-                    h = col._handles.pop(p)
-                    for r in sorted(h.chunks, key=lambda r: r.start):
-                        all_rows.append((r, h.chunks[r]))
-            all_rows.sort(key=lambda t: t[0].start)
-            if all_rows:
-                rows = np.concatenate([a for _, a in all_rows], axis=0)
-                offs = 0
-                for p in new_group.members:
-                    for r in target.ranges_of(p):
-                        col.add_chunk(p, r, rows[r.start:r.end])
+                h = col._handles.get(p)
+                if h is None:
+                    continue
+                for r in sorted(h.chunks, key=lambda r: r.start):
+                    for q in new_group.members:
+                        for tr in target.ranges_of(q):
+                            lo = max(r.start, tr.start)
+                            hi = min(r.end, tr.end)
+                            if lo < hi:
+                                mm.register_range_move(
+                                    col, LongRange(lo, hi), q)
+        if mm.pending():
+            mm.sync()
+        for col in collections:
+            col.group = new_group
+            for p in list(col._handles):
+                if p not in new_group:
+                    col._handles.pop(p)
             col.update_dist()
         self.events.append(("resize", new_size))
         self.group = new_group
@@ -183,6 +388,12 @@ class FaultTolerantDriver:
     world: ElasticWorld = None
     glb_collections: tuple = ()
     evictions: int = 0
+    # Real process liveness: when a process-backed place group is
+    # attached, heartbeats come from the backend's live-rank view
+    # (pipe EOF / collective deadline → dead rank → silent places)
+    # instead of the caller's simulated ``failed_places``.
+    liveness_group: object = None
+    liveness_chaos: object = None
 
     def __post_init__(self):
         if self.monitor is None:
@@ -194,10 +405,17 @@ class FaultTolerantDriver:
                  failed_places=()):
         """One resilient step. Returns (state, info)."""
         info = {"restored": False, "rebalanced": False}
-        for p in range(self.n_places):
-            if p not in failed_places:
-                self.monitor.beat(p)
-        dead = self.monitor.tick()
+        if self.liveness_group is not None:
+            # real liveness: places owned by ranks the backend has seen
+            # die (pipe EOF, collective deadline) stop beating
+            dead = feed_process_liveness(self.monitor,
+                                         self.liveness_group,
+                                         chaos=self.liveness_chaos)
+        else:
+            for p in range(self.n_places):
+                if p not in failed_places:
+                    self.monitor.beat(p)
+            dead = self.monitor.tick()
         if dead and self.glb is not None \
                 and (self.world is not None or self.glb_collections):
             # fault-tolerant GLB: survivors absorb the dead places' work

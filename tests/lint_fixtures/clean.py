@@ -59,3 +59,11 @@ def narrow_except():
 def sorted_roundrobin(handles, dests):
     return {k: dests[i % len(dests)]
             for i, k in enumerate(sorted(handles.keys()))}
+
+
+def deadline_bounded_recv(conn, timeout):
+    # the PipeBackend._recv pattern: poll with a deadline, treat expiry
+    # and EOF as peer failure instead of blocking forever
+    if not conn.poll(timeout):
+        raise TimeoutError("peer silent past the collective deadline")
+    return conn.recv()

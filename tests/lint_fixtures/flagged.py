@@ -59,3 +59,15 @@ def swallow():
 def roundrobin_assign(handles, dests):
     return {k: dests[i % len(dests)]
             for i, k in enumerate(handles.keys())}   # EXPECT: RL006
+
+
+def blocking_recv(conn):
+    # nothing bounds the wait: a dead peer hangs this forever
+    return conn.recv()                               # EXPECT: RL008
+
+
+def blocking_recv_loop(conns):
+    out = []
+    for c in conns:
+        out.append(c.recv())                         # EXPECT: RL008
+    return out
