@@ -39,6 +39,11 @@ RL008  bare ``Connection.recv()`` with no ``poll(timeout)`` anywhere in
        caller blocked forever (the hang the deadline-aware
        ``PipeBackend._recv`` exists to prevent) — poll with a timeout
        and treat expiry/EOF as peer failure.
+RL009  direct ``pl.pallas_call`` outside ``kernels/``: kernels must
+       register in ``kernels.ops``'s backend dispatch so the
+       interpret-mode CPU fallback and the XLA reference path are
+       never bypassed — a raw ``pallas_call`` in data-plane code
+       breaks CPU CI and dry-run cost analysis silently.
 
 Suppression: add ``# noqa`` (optionally ``# noqa: RL00x``) or
 ``# repro-lint: ok`` on the flagged line.
@@ -70,6 +75,8 @@ RULES = {
     "RL007": "unused module-level import",
     "RL008": "bare Connection.recv() without a poll(timeout) guard in "
              "scope",
+    "RL009": "direct pallas_call outside kernels/ (route through the "
+             "kernels.ops backend dispatch)",
 }
 
 # RL001: names that must not be called from traced code
@@ -217,6 +224,7 @@ class _FileChecker:
         self.check_dict_order_roundrobin()
         self.check_unused_imports()
         self.check_bare_recv()
+        self.check_pallas_call_outside_kernels()
         return self.findings
 
     # -- RL001 -------------------------------------------------------------
@@ -484,6 +492,27 @@ class _FileChecker:
                               "scope: a dead peer blocks this call "
                               "forever — poll with a deadline first and "
                               "treat expiry/EOF as peer failure")
+
+    # -- RL009 -------------------------------------------------------------
+    def check_pallas_call_outside_kernels(self) -> None:
+        """Flag any ``pallas_call`` invocation in a file that does not
+        live under a ``kernels`` directory: everything outside the
+        kernel library must go through ``kernels.ops``, whose dispatch
+        is what keeps the interpret-mode CPU fallback and the XLA
+        reference path selectable (``set_backend``/
+        ``REPRO_KERNEL_BACKEND``)."""
+        parts = os.path.normpath(self.path).split(os.sep)
+        if "kernels" in parts:
+            return  # the kernel library itself is the one allowed home
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Call) \
+                    and _tail(node.func) == "pallas_call":
+                self.flag(node, "RL009",
+                          "direct pallas_call outside kernels/: this "
+                          "kernel bypasses the kernels.ops backend "
+                          "dispatch, so interpret-mode CPU CI and the "
+                          "XLA reference path never see it — move it "
+                          "into kernels/ and register it in ops")
 
 
 # ---------------------------------------------------------------------------

@@ -663,27 +663,71 @@ class DistArray(DistCollection):
         return int(np.asarray(rows).nbytes) + 16
 
     # -- row codec (transport layer) -------------------------------------
-    def encode_rows(self, payload):
+    def encode_rows(self, payload, *, donate: bool = False):
         """Chunk payload → ``(m, width)`` uint8 row matrix + manifest
         (range, dtype, trailing shape) — the §5.3 Alltoallv wire format
-        a :class:`~repro.core.transport.DeviceTransport` ships."""
+        a :class:`~repro.core.transport.DeviceTransport` ships.
+
+        ``donate=True`` is the buffer-donation fast path: the caller
+        promises not to mutate the payload while the rows are live, so
+        the matrix is a zero-copy ``view`` of the chunk bytes instead
+        of a ``tobytes`` copy — what the transport (which packs the
+        rows into the send buffer immediately) always wants."""
         r, rows = payload
         a = np.ascontiguousarray(np.asarray(rows))
         m = int(a.shape[0]) if a.ndim else 0
         width = int(a.nbytes // m) if m else 0
-        u8 = np.frombuffer(a.tobytes(), np.uint8).reshape(m, width) if m \
-            else np.zeros((0, 0), np.uint8)
+        if not m:
+            u8 = np.zeros((0, 0), np.uint8)
+        elif donate and not a.dtype.hasobject:
+            u8 = a.view(np.uint8).reshape(m, width)
+        else:
+            u8 = np.frombuffer(a.tobytes(), np.uint8).reshape(m, width)
         return u8, ("chunk", r, _dtype_token(a.dtype), tuple(a.shape[1:]))
+
+    def encode_rows_raw(self, payload):
+        """Typed ``(m, k)`` chunk matrix + manifest for the fused
+        kernel codec — the bitcast to wire bytes happens *in-kernel*
+        (``kernels.reloc_codec.encode_pack``), so no host byte view is
+        built at all.  Returns ``None`` when the dtype can't ride a
+        jax round trip bit-exactly (float64 under x64-off, object
+        dtypes): those payloads take the byte-row path instead."""
+        from ..kernels.reloc_codec import jax_safe_dtype
+
+        r, rows = payload
+        a = np.ascontiguousarray(np.asarray(rows))
+        if a.ndim == 0 or a.shape[0] == 0 or a.size == 0 \
+                or not jax_safe_dtype(a.dtype):
+            return None
+        m = int(a.shape[0])
+        return (a.reshape(m, -1),
+                ("chunk", r, _dtype_token(a.dtype), tuple(a.shape[1:])))
 
     def decode_rows(self, rows, manifest):
         """Inverse of :meth:`encode_rows`; ``rows`` may be wider than
-        the encoded width (transport padding) and may live on device."""
+        the encoded width (transport padding) and may live on device.
+        A device block on a fused codec backend decodes in-kernel
+        (trim + bitcast, ``kernels.reloc_codec.decode_rows``) and only
+        the typed result crosses to host."""
         _, r, dt, trail = manifest
         dtype = np.dtype(dt)
         m = r.size
         nb = int(dtype.itemsize * np.prod(trail, dtype=np.int64))
         if m == 0:
             return r, np.zeros((0,) + trail, dtype)
+        if nb and not isinstance(rows, (np.ndarray, list)):
+            import jax
+
+            if isinstance(rows, jax.Array):
+                from ..kernels import ops
+                from ..kernels.reloc_codec import jax_safe_dtype
+
+                if ops.resolve_backend() in ("pallas",
+                                             "pallas_interpret") \
+                        and jax_safe_dtype(dtype):
+                    out = ops.reloc_decode_rows(rows[:m], nbytes=nb,
+                                                dtype=dtype)
+                    return r, np.array(out).reshape((m,) + trail)
         buf = np.asarray(rows, np.uint8)[:m, :nb]
         arr = np.frombuffer(np.ascontiguousarray(buf).tobytes(),
                             dtype=dtype).reshape((m,) + trail).copy()

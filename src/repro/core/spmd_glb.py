@@ -382,7 +382,17 @@ def spmd_steal_loop(x, valid, gids, *, axis_name: str, candidates, hops,
 # ---------------------------------------------------------------------------
 # Host wrapper: DistArray -> device buffers -> jit loop -> DistArray
 # ---------------------------------------------------------------------------
-_LOOP_CACHE: dict = {}
+# bounded like DeviceTransport._fns: every (n, S, config) key is a
+# compiled program, and elastic runs change n per resize
+def _make_loop_cache():
+    import os
+
+    from ..kernels.reloc_codec import LRUCache
+
+    return LRUCache(int(os.environ.get("REPRO_KERNEL_CACHE_CAP", "64")))
+
+
+_LOOP_CACHE = _make_loop_cache()
 
 
 def _loop_fn(n: int, S: int, cand_b: bytes, hops_b: bytes,
@@ -413,7 +423,7 @@ def _loop_fn(n: int, S: int, cand_b: bytes, hops_b: bytes,
                 assume_prefix=True)
 
         fn = jax.jit(jax.vmap(per_shard, axis_name="places"))
-        _LOOP_CACHE[key] = fn
+        _LOOP_CACHE.put(key, fn)
     return fn
 
 
@@ -500,13 +510,17 @@ def _run_device_steal(col, lifelines, alive, *, steal_ratio, min_keep,
         valid[i, :m] = True
         gids[i, :m] = idx
     if ship_rows:
-        # codec-encoded byte rows ride the all_to_all payload slot
+        # codec-encoded byte rows ride the all_to_all payload slot (via
+        # the transport's donation probe: DistArray hands back zero-copy
+        # byte views instead of tobytes copies)
+        from .transport import _encode_rows
+
         x = np.zeros((n, S, row_nbytes), np.uint8)
         for i, (rows, idx) in enumerate(per_place):
             m = len(idx)
             if m:
-                u8, _ = col.encode_rows(
-                    (LongRange(0, m), np.asarray(rows)))
+                u8, _ = _encode_rows(
+                    col, (LongRange(0, m), np.asarray(rows)))
                 x[i, :m] = u8
     else:
         # the id column doubles as the payload for the host data plane
@@ -517,7 +531,19 @@ def _run_device_steal(col, lifelines, alive, *, steal_ratio, min_keep,
     fn = _loop_fn(n, S, cand.tobytes(), hops.tobytes(),
                   alive_mask.tobytes(), float(steal_ratio), int(min_keep),
                   int(idle_threshold), int(max_rounds))
-    out = jax.tree_util.tree_map(np.asarray, fn(x, valid, gids))
+    dev_out = fn(x, valid, gids)
+    # on a fused codec backend the relocated rows stay on device: the
+    # collection's decode fast path trims + bitcasts them in-kernel and
+    # only the typed result crosses to host
+    if ship_rows:
+        from ..kernels import ops
+
+        fused_rows = ops.resolve_backend() in ("pallas",
+                                               "pallas_interpret")
+    else:
+        fused_rows = False
+    out = {k: (v if (fused_rows and k == "x") else np.asarray(v))
+           for k, v in dev_out.items()}
 
     # the plan is replicated — every shard reports identical stats
     stolen = int(out["stolen"][0])
@@ -547,8 +573,11 @@ def _run_device_steal(col, lifelines, alive, *, steal_ratio, min_keep,
             # decode the relocated byte rows directly — the rows arrived
             # with their ids, no host materialization needed
             from .collections import _dtype_token
+            blk = out["x"][i][v][order]
+            if isinstance(blk, np.ndarray):
+                blk = np.ascontiguousarray(blk)
             _, r = col.decode_rows(
-                np.ascontiguousarray(out["x"][i][v][order]),
+                blk,
                 ("chunk", LongRange(0, len(g)), _dtype_token(orig_dtype),
                  trail))
         else:

@@ -67,33 +67,47 @@ class TransportStats:
     wire_bytes: int = 0      # valid rows × padded class width (row
     #                          padding included; the dense buffers'
     #                          empty capacity slots are not)
+    pad_waste_bytes: int = 0  # wire_bytes minus unpadded payload bytes
+    #                          actually shipped — the pow2 _width_class
+    #                          padding overhead, the number the fused
+    #                          codec trajectory is judged against
     width: int = 0           # widest padded row-width class exchanged
     exchanges: int = 0       # jitted all_to_all dispatches (one per
     #                          row-width class in the window)
+    codec_backend: str = ""  # resolved kernels.ops backend the window's
+    #                          codec ran on ("xla", "pallas",
+    #                          "pallas_interpret"; "" = no codec ran)
 
     def merge(self, other: "TransportStats") -> "TransportStats":
         """Accumulate ``other`` into self (lifetime totals from
-        per-window stats; ``width`` is a high-water mark)."""
+        per-window stats; ``width`` is a high-water mark and
+        ``codec_backend`` keeps the most recent window's value)."""
         self.payloads += other.payloads
         self.local += other.local
         self.rows += other.rows
         self.row_bytes += other.row_bytes
         self.wire_bytes += other.wire_bytes
+        self.pad_waste_bytes += other.pad_waste_bytes
         self.exchanges += other.exchanges
         self.width = max(self.width, other.width)
+        if other.codec_backend:
+            self.codec_backend = other.codec_backend
         return self
 
     def as_dict(self, prefix: str = "") -> dict:
-        """Flat ``{name: number}`` view — the shape both the metrics
-        registry and the bench JSON consume."""
+        """Flat ``{name: number}`` view (plus the ``codec_backend``
+        string) — the shape both the metrics registry and the bench
+        JSON consume."""
         return {
             f"{prefix}payloads": self.payloads,
             f"{prefix}local": self.local,
             f"{prefix}rows": self.rows,
             f"{prefix}row_bytes": self.row_bytes,
             f"{prefix}wire_bytes": self.wire_bytes,
+            f"{prefix}pad_waste_bytes": self.pad_waste_bytes,
             f"{prefix}width": self.width,
             f"{prefix}exchanges": self.exchanges,
+            f"{prefix}codec_backend": self.codec_backend,
         }
 
     def publish(self, registry=None) -> None:
@@ -111,15 +125,16 @@ class TransportStats:
             p = f"transport.{self.kind}."
             names = tuple(p + f for f in (
                 "payloads", "local", "rows", "row_bytes", "wire_bytes",
-                "exchanges", "width"))
+                "pad_waste_bytes", "exchanges", "width"))
             _PUBLISH_NAMES[self.kind] = names
         reg.counter(names[0]).set(self.payloads)
         reg.counter(names[1]).set(self.local)
         reg.counter(names[2]).set(self.rows)
         reg.counter(names[3]).set(self.row_bytes)
         reg.counter(names[4]).set(self.wire_bytes)
-        reg.counter(names[5]).set(self.exchanges)
-        reg.gauge(names[6]).set(self.width)
+        reg.counter(names[5]).set(self.pad_waste_bytes)
+        reg.counter(names[6]).set(self.exchanges)
+        reg.gauge(names[7]).set(self.width)
 
 
 # metric-name tuples per transport kind, built once (publish is invoked
@@ -146,6 +161,31 @@ def _account_exchange(transport, stats: TransportStats, sp) -> None:
         telemetry.observe("transport.exchange_wire_bytes",
                           stats.wire_bytes)
         telemetry.observe("transport.exchange_rows", stats.rows)
+
+
+# per-collection-type capability probe for the codec donation fast path
+_DONATE_OK: dict[type, bool] = {}
+
+
+def _encode_rows(col, payload):
+    """Call a collection's row codec, passing ``donate=True`` when the
+    codec supports it: the transport packs the returned rows into the
+    send buffer immediately and never mutates them, so a donating codec
+    may hand back zero-copy views of the extracted chunk instead of a
+    ``tobytes`` copy.  Probed once per collection type — third-party
+    collections without the keyword keep working unchanged."""
+    ok = _DONATE_OK.get(type(col))
+    if ok is None:
+        import inspect
+
+        try:
+            ok = "donate" in inspect.signature(col.encode_rows).parameters
+        except (TypeError, ValueError):
+            ok = False
+        _DONATE_OK[type(col)] = ok
+    if ok:
+        return col.encode_rows(payload, donate=True)
+    return col.encode_rows(payload)
 
 
 @runtime_checkable
@@ -224,11 +264,17 @@ class DeviceTransport:
 
     device_plane = True
 
-    def __init__(self, *, pad_multiple: int = 8):
+    def __init__(self, *, pad_multiple: int = 8, jit_cache_cap: int = 32):
         import threading
 
+        from ..kernels.reloc_codec import LRUCache
+
         self.pad_multiple = int(pad_multiple)
-        self._fns: dict = {}
+        # bounded: long elastic runs change n on every resize, and each
+        # (n, S, W) key is a compiled program — the eviction counter
+        # (published as transport.device.jit_cache_*) is the thrash
+        # signal, the cap the leak stop
+        self._fns = LRUCache(jit_cache_cap)
         self.lifetime = TransportStats(kind="device")
         # one shared instance serves many managers' background delivery
         # threads (the README's shared-jit-cache pattern) — the counter
@@ -260,8 +306,37 @@ class DeviceTransport:
 
             fn = jax.jit(jax.vmap(per_shard, axis_name="transport",
                                   in_axes=(0, None)))
-            self._fns[key] = fn
+            self._fns.put(key, fn)
         return fn
+
+    def _fused_exchange_fn(self, n: int, Sp: int, W: int):
+        """The fused-codec collective: the kernel-packed send buffer is
+        slotted per (src, dest) pair, so the all_to_all needs no mask
+        and no prefix bookkeeping — shard s's ``buf[d]`` block lands
+        verbatim at the receiver's ``recv[d][s]``."""
+        key = ("fused", n, Sp, W)
+        fn = self._fns.get(key)
+        if fn is None:
+            import jax
+
+            def per_shard(buf):
+                return jax.lax.all_to_all(buf, "transport", 0, 0,
+                                          tiled=False)
+
+            fn = jax.jit(jax.vmap(per_shard, axis_name="transport"))
+            self._fns.put(key, fn)
+        return fn
+
+    def _publish_jit_cache(self, registry=None) -> None:
+        reg = registry if registry is not None else telemetry.metrics()
+        info = self._fns.info()
+        reg.gauge("transport.device.jit_cache_size").set(info["size"])
+        reg.gauge("transport.device.jit_cache_cap").set(info["cap"])
+        reg.counter("transport.device.jit_cache_hits").set(info["hits"])
+        reg.counter("transport.device.jit_cache_misses").set(
+            info["misses"])
+        reg.counter("transport.device.jit_cache_evictions").set(
+            info["evictions"])
 
     def exchange(self, group, counts, payloads):
         with telemetry.span("transport.exchange", kind="device",
@@ -271,9 +346,15 @@ class DeviceTransport:
     def _exchange(self, group, counts, payloads, sp):
         import jax
 
+        from ..kernels import ops
+
         n = group.size()
         place_index = {p: i for i, p in enumerate(group.members)}
-        stats = TransportStats(kind="device")
+        # resolved once per window: the whole window's codec runs on one
+        # backend, so fused and composite rows never mix in a bucket
+        backend = ops.resolve_backend()
+        fused = backend in ("pallas", "pallas_interpret")
+        stats = TransportStats(kind="device", codec_backend=backend)
 
         # encode off-place payloads; self-moves bypass the wire verbatim
         entries: dict[int, dict] = {}   # payload position -> wire entry
@@ -281,7 +362,26 @@ class DeviceTransport:
             if src == dest:
                 stats.local += 1
                 continue
-            rows, manifest = col.encode_rows(payload)
+            if fused:
+                raw_fn = getattr(col, "encode_rows_raw", None)
+                raw = raw_fn(payload) if raw_fn is not None else None
+                if raw is not None:
+                    # typed chunk matrix: the encode kernel bitcasts it
+                    # to wire bytes in-kernel — no host byte view at all
+                    mat, manifest = raw
+                    m, k = int(mat.shape[0]), int(mat.shape[1])
+                    nb = k * np.dtype(mat.dtype).itemsize
+                    entries[pos] = {
+                        "pos": pos, "si": place_index[src],
+                        "di": place_index[dest], "raw": mat, "m": m,
+                        "wmax": nb, "nbytes": m * nb,
+                        "manifest": manifest,
+                        "dev": isinstance(mat, jax.Array)}
+                    stats.payloads += 1
+                    stats.rows += m
+                    stats.row_bytes += m * nb
+                    continue
+            rows, manifest = _encode_rows(col, payload)
             if isinstance(rows, np.ndarray) and rows.ndim == 2:
                 # chunk payloads stay one (m, w) matrix end to end: the
                 # pack is a single block copy, never m row assignments
@@ -319,8 +419,16 @@ class DeviceTransport:
                 continue
             buckets.setdefault(self._width_class(e["wmax"]), []).append(e)
         for W, bucket in sorted(buckets.items()):
-            self._exchange_bucket(n, W, bucket, payloads, delivered, stats)
+            if fused:
+                self._exchange_bucket_fused(n, W, bucket, payloads,
+                                            delivered, stats, backend)
+            else:
+                self._exchange_bucket(n, W, bucket, payloads, delivered,
+                                      stats)
         _account_exchange(self, stats, sp)
+        if telemetry.enabled():
+            telemetry.metrics().add_publisher(
+                (id(self), "jit_cache"), self._publish_jit_cache)
         return delivered, stats
 
     def _width_class(self, w: int) -> int:
@@ -358,7 +466,9 @@ class DeviceTransport:
         recv = self._exchange_fn(n, S, W)(buf, ship)
         stats.exchanges += 1
         stats.width = max(stats.width, W)
-        stats.wire_bytes += int(ship.sum()) * W
+        wire = int(ship.sum()) * W
+        stats.wire_bytes += wire
+        stats.pad_waste_bytes += wire - sum(e["nbytes"] for e in bucket)
 
         # receive layout: shard d's prefix holds, for src 0..n-1, the
         # ship[src, d] rows that src packed for d, in src's order.
@@ -420,6 +530,136 @@ class DeviceTransport:
             blocks.append(jnp.zeros((S - m, W), jnp.uint8))
             shards.append(jnp.concatenate(blocks))
         return jnp.stack(shards)
+
+    # -- the fused-kernel window path (backend "pallas"/"pallas_interpret")
+    def _exchange_bucket_fused(self, n, W, bucket, payloads, delivered,
+                               stats, backend):
+        """One fused-codec kernel + one unmasked ``all_to_all`` over the
+        entries of one row-width class.
+
+        The send buffer is slotted *per (src, dest) pair* — capacity is
+        the pow2 of the busiest pair, every pair owns its own block — so
+        the whole encode → bitcast → permute → pad chain is a single
+        ``pallas_call``, the collective needs no mask, receiver blocks
+        are contiguous slices, and fan-in can never overflow a shared
+        prefix.  Delivered bytes are bit-identical to the composite
+        path: entries pack in registration order within each pair, the
+        same order ``_exchange_bucket`` produces."""
+        import jax
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+
+        ship = np.zeros((n, n), np.int32)
+        for e in bucket:
+            ship[e["si"], e["di"]] += e["m"]
+        Sp = 1 << (int(ship.max()) - 1).bit_length()
+        pairs = n * n
+
+        # slot assignment: each entry's rows land at [p0, p0+m) inside
+        # its pair's block, accumulated in registration order
+        fill = np.zeros((n, n), np.int64)
+        for e in bucket:
+            e["p0"] = int(fill[e["si"], e["di"]])
+            fill[e["si"], e["di"]] += e["m"]
+
+        wid_tab = np.zeros(pairs * Sp, np.int32)
+        raw_keys = {(str(np.dtype(e["raw"].dtype)), int(e["raw"].shape[1]))
+                    for e in bucket if "raw" in e}
+        if len(raw_keys) == 1 and all("raw" in e for e in bucket):
+            # homogeneous typed bucket (the chunk-steal hot path): one
+            # fused encode+pack kernel straight off the concatenated
+            # chunk matrices — the bitcast happens in-kernel
+            idx_tab = np.zeros(pairs * Sp, np.int32)
+            mats, base = [], 0
+            for e in bucket:
+                s0 = (e["si"] * n + e["di"]) * Sp + e["p0"]
+                idx_tab[s0:s0 + e["m"]] = np.arange(base, base + e["m"])
+                wid_tab[s0:s0 + e["m"]] = e["wmax"]
+                mats.append(e["raw"])
+                base += e["m"]
+            if any(isinstance(x, jax.Array) for x in mats):
+                src = jnp.concatenate([jnp.asarray(x) for x in mats])
+            else:
+                src = np.concatenate(mats)
+            buf = ops.reloc_encode_pack(src, idx_tab, wid_tab,
+                                        pairs=pairs, slots=Sp, width=W,
+                                        impl=backend)
+        else:
+            # mixed bucket: every entry contributes flat wire bytes to
+            # one arena; a single pack kernel gathers them into slots
+            off_tab = np.zeros(pairs * Sp, np.int32)
+            pieces, dev, base = [], False, 0
+            for e in bucket:
+                s0 = (e["si"] * n + e["di"]) * Sp + e["p0"]
+                if "rows" in e:
+                    for j, (r, w) in enumerate(zip(e["rows"],
+                                                   e["widths"])):
+                        off_tab[s0 + j] = base
+                        wid_tab[s0 + j] = w
+                        if isinstance(r, jax.Array):
+                            dev = True
+                            pieces.append(r)
+                        else:
+                            pieces.append(np.asarray(r, np.uint8))
+                        base += w
+                    continue
+                bm = e["mat"] if "mat" in e else _byte_mat(e["raw"])
+                w, m = e["wmax"], e["m"]
+                off_tab[s0:s0 + m] = base + w * np.arange(m)
+                wid_tab[s0:s0 + m] = w
+                if isinstance(bm, jax.Array):
+                    dev = True
+                pieces.append(bm.reshape(-1))
+                base += m * w
+            # ≥ W trailing zeros: the kernel's fixed-width load of the
+            # last row must not read past the arena's end
+            pad = np.zeros(W, np.uint8)
+            if dev:
+                arena = jnp.concatenate(
+                    [jnp.asarray(p, jnp.uint8) for p in pieces]
+                    + [jnp.asarray(pad)])
+            else:
+                arena = np.concatenate(pieces + [pad])
+            buf = ops.reloc_pack_rows(arena, off_tab, wid_tab,
+                                      pairs=pairs, slots=Sp, width=W,
+                                      impl=backend)
+
+        recv = self._fused_exchange_fn(n, Sp, W)(
+            buf.reshape(n, n, Sp, W))
+        stats.exchanges += 1
+        stats.width = max(stats.width, W)
+        wire = int(ship.sum()) * W
+        stats.wire_bytes += wire
+        stats.pad_waste_bytes += wire - sum(e["nbytes"] for e in bucket)
+
+        # recv[di, si] is exactly what si packed for di; each entry's
+        # block is the contiguous slot slice it claimed above.  Typed
+        # (raw) entries keep their block on device — the collection's
+        # decode fast path trims + bitcasts it in-kernel
+        for e in bucket:
+            block = recv[e["di"], e["si"], e["p0"]:e["p0"] + e["m"]]
+            if not (e["dev"] or "raw" in e):
+                block = np.asarray(block)
+            rows = block if ("mat" in e or "raw" in e) \
+                else [block[i] for i in range(e["m"])]
+            col, src, dest, _ = payloads[e["pos"]]
+            delivered[e["pos"]] = (
+                col, src, dest, col.decode_rows(rows, e["manifest"]))
+
+
+def _byte_mat(mat):
+    """(m, k) typed matrix → (m, k*itemsize) uint8 wire view (device
+    bitcast for jax arrays, zero-copy view for contiguous numpy)."""
+    import jax
+
+    m = int(mat.shape[0])
+    nb = int(mat.shape[1]) * np.dtype(mat.dtype).itemsize
+    if isinstance(mat, jax.Array):
+        import jax.numpy as jnp
+
+        return jax.lax.bitcast_convert_type(mat, jnp.uint8).reshape(m, nb)
+    return np.ascontiguousarray(mat).view(np.uint8).reshape(m, nb)
 
 
 def make_transport(spec: Any) -> RelocationTransport:

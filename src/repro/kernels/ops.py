@@ -8,24 +8,33 @@ the XLA path is what the multi-pod dry-run lowers, keeping
 execution target.
 
 Select with ``repro.kernels.ops.set_backend("xla"|"pallas"|"pallas_interpret")``
-or per-call via ``impl=``.
+or per-call via ``impl=``; the ``REPRO_KERNEL_BACKEND`` environment
+variable seeds the initial backend (so CI can rerun whole suites on
+``pallas_interpret`` without touching test code).
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
 from . import ref
+from . import reloc_codec as _rc
 from .flash_attention import flash_attention as _flash_pallas
 from .mlstm import mlstm_chunkwise as _mlstm_pallas
 from .moe_dispatch import gather_rows as _gather_pallas
 from .moe_dispatch import moe_combine as _combine_pallas
 from .rg_lru import rg_lru as _rg_lru_pallas
 
-__all__ = ["set_backend", "get_backend", "attention", "gather_rows",
-           "moe_combine", "rg_lru_scan", "mlstm"]
+__all__ = ["set_backend", "get_backend", "resolve_backend", "attention",
+           "gather_rows", "moe_combine", "rg_lru_scan", "mlstm",
+           "reloc_encode_pack", "reloc_pack_rows", "reloc_decode_rows"]
 
-_BACKEND = "auto"
 _VALID = ("auto", "xla", "xla_naive", "pallas", "pallas_interpret")
+_BACKEND = os.environ.get("REPRO_KERNEL_BACKEND", "auto")
+if _BACKEND not in _VALID:          # typo'd env var must fail loudly at
+    raise ValueError(               # import, not as silent auto fallback
+        f"REPRO_KERNEL_BACKEND={_BACKEND!r} not in {_VALID}")
 
 
 def set_backend(name: str) -> None:
@@ -44,6 +53,14 @@ def _resolve(impl: str | None) -> str:
     if b == "auto":
         b = "pallas" if jax.default_backend() == "tpu" else "xla"
     return b
+
+
+def resolve_backend(impl: str | None = None) -> str:
+    """The backend a call would dispatch to right now (``auto``
+    resolved) — what :class:`~repro.core.transport.DeviceTransport`
+    consults once per window to pick the fused or composite codec path,
+    and what lands in ``TransportStats.codec_backend``."""
+    return _resolve(impl)
 
 
 def attention(q, k, v, *, causal=True, window=None, softcap=0.0,
@@ -81,6 +98,42 @@ def rg_lru_scan(x, a, h0=None, *, impl: str | None = None, **block_kw):
         return ref.rg_lru_ref(x, a, h0)
     return _rg_lru_pallas(x, a, h0, interpret=(b == "pallas_interpret"),
                           **block_kw)
+
+
+def reloc_encode_pack(mat, idx, widths, *, pairs, slots, width,
+                      impl: str | None = None):
+    """Fused encode+pack: collection chunk rows → all_to_all buffer
+    (bitcast, destination permutation, padding in one kernel)."""
+    b = _resolve(impl)
+    if b in ("xla", "xla_naive"):
+        return ref.reloc_encode_pack_ref(mat, idx, widths, pairs=pairs,
+                                         slots=slots, width=width)
+    return _rc.encode_pack(mat, idx, widths, pairs=pairs, slots=slots,
+                           width=width,
+                           interpret=(b == "pallas_interpret"))
+
+
+def reloc_pack_rows(flat_src, offsets, widths, *, pairs, slots, width,
+                    impl: str | None = None):
+    """Pack pre-encoded ragged byte rows into the all_to_all buffer."""
+    b = _resolve(impl)
+    if b in ("xla", "xla_naive"):
+        return ref.reloc_pack_rows_ref(flat_src, offsets, widths,
+                                       pairs=pairs, slots=slots,
+                                       width=width)
+    return _rc.pack_rows(flat_src, offsets, widths, pairs=pairs,
+                         slots=slots, width=width,
+                         interpret=(b == "pallas_interpret"))
+
+
+def reloc_decode_rows(rows, *, nbytes, dtype, impl: str | None = None):
+    """Fused unpack+decode: delivered wire rows → typed chunk rows
+    (class padding trimmed, manifest dtype bitcast in-kernel)."""
+    b = _resolve(impl)
+    if b in ("xla", "xla_naive"):
+        return ref.reloc_decode_rows_ref(rows, nbytes=nbytes, dtype=dtype)
+    return _rc.decode_rows(rows, nbytes=nbytes, dtype=dtype,
+                           interpret=(b == "pallas_interpret"))
 
 
 def mlstm(q, k, v, i_gate, f_gate, *, impl: str | None = None,

@@ -7,7 +7,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["attention_ref", "gather_rows_ref", "moe_combine_ref",
-           "rg_lru_ref", "mlstm_ref"]
+           "rg_lru_ref", "mlstm_ref", "reloc_encode_pack_ref",
+           "reloc_pack_rows_ref", "reloc_decode_rows_ref"]
 
 
 def attention_ref(q, k, v, *, causal=True, window=None, softcap=0.0,
@@ -182,3 +183,54 @@ def mlstm_ref(q, k, v, i_gate, f_gate, c0=None, n0=None, m0=None):
         (qf.transpose(1, 0, 2), kf.transpose(1, 0, 2), vf.transpose(1, 0, 2),
          ig.transpose(1, 0), fg.transpose(1, 0)))
     return hs.transpose(1, 0, 2).astype(q.dtype), (C, n, m)
+
+
+# ---------------------------------------------------------------------------
+# relocation codec oracles (reloc_codec.py)
+# ---------------------------------------------------------------------------
+def _u8_rows(mat):
+    """(m, k) any-dtype rows → (m, k*itemsize) uint8 wire rows."""
+    m, k = mat.shape
+    isz = jnp.dtype(mat.dtype).itemsize
+    u8 = jax.lax.bitcast_convert_type(mat, jnp.uint8)
+    return u8.reshape(m, k * isz) if isz > 1 else u8
+
+
+def reloc_encode_pack_ref(mat, idx, widths, *, pairs, slots, width):
+    """Oracle for :func:`repro.kernels.reloc_codec.encode_pack`."""
+    mat = jnp.asarray(mat)
+    u8 = _u8_rows(mat)
+    nb = int(u8.shape[1])
+    if width > nb:
+        u8 = jnp.pad(u8, ((0, 0), (0, width - nb)))
+    idx = jnp.clip(jnp.asarray(idx, jnp.int32), 0, mat.shape[0] - 1)
+    rows = u8[idx]                                   # (pairs*slots, width)
+    keep = jnp.arange(width, dtype=jnp.int32)[None, :] \
+        < jnp.asarray(widths, jnp.int32)[:, None]
+    return jnp.where(keep, rows, 0).reshape(pairs, slots, width)
+
+
+def reloc_pack_rows_ref(flat_src, offsets, widths, *, pairs, slots, width):
+    """Oracle for :func:`repro.kernels.reloc_codec.pack_rows`."""
+    flat_src = jnp.asarray(flat_src, jnp.uint8)
+    span = jnp.arange(width, dtype=jnp.int32)
+    pos = jnp.asarray(offsets, jnp.int32)[:, None] + span[None, :]
+    rows = flat_src[jnp.clip(pos, 0, flat_src.shape[0] - 1)]
+    keep = span[None, :] < jnp.asarray(widths, jnp.int32)[:, None]
+    return jnp.where(keep, rows, 0).reshape(pairs, slots, width)
+
+
+def reloc_decode_rows_ref(rows, *, nbytes, dtype):
+    """Oracle for :func:`repro.kernels.reloc_codec.decode_rows`."""
+    import numpy as np
+
+    rows = jnp.asarray(rows)
+    m = int(rows.shape[0])
+    dt = np.dtype(dtype)
+    k = nbytes // dt.itemsize
+    u8 = rows[:, :nbytes].astype(jnp.uint8)
+    if dt.itemsize == 1:
+        return jax.lax.bitcast_convert_type(u8.reshape(m, k),
+                                            jnp.dtype(dt))
+    return jax.lax.bitcast_convert_type(u8.reshape(m, k, dt.itemsize),
+                                        jnp.dtype(dt))

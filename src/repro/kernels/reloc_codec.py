@@ -1,0 +1,309 @@
+"""Fused Pallas relocation-codec kernels: chunks → all_to_all buffer → chunks.
+
+The device transport's window hot path used to be a chain of separate
+XLA ops — per-leaf ``bitcast_convert_type``, per-value ``concat``, a
+host-side ``_pack`` assembling the send buffer row by row, then
+``_ship_hop``'s cumsum/searchsorted gather before the collective.  Each
+dispatch pays launch overhead and an extra HBM round trip.  These
+kernels collapse the chain to **one ``pallas_call`` per width class**:
+
+* :func:`encode_pack` — fused *encode+pack*: reads rows straight out of
+  a collection chunk matrix (any dtype), bitcasts them to wire bytes
+  **in-kernel**, applies the destination permutation from the counts
+  matrix (a scalar-prefetched slot table), and writes directly into the
+  ``(pairs, slots, width)`` bucketed all_to_all send buffer — padding
+  and capacity zeroing included.
+* :func:`pack_rows` — the same pack for *already-encoded* ragged byte
+  rows (pytree values, pickled metadata): one dynamic gather per row
+  from a flat byte arena into its buffer slot.
+* :func:`decode_rows` — fused *unpack+decode*: a contiguous block of
+  received wire rows → the destination chunk matrix, the manifest's
+  dtype/width applied in-kernel (trim the class padding, bitcast back).
+
+The grid iterates over ``(src, dest)`` pairs — each grid step owns one
+pair's contiguous slot block and walks its rows with a ``fori_loop`` of
+dynamic loads/stores, so the grid stays tiny (``n²``) while the row
+work is vectorized per slot.  All three kernels run under
+``interpret=True`` on CPU (the CI parity target); the compiled path is
+the TPU execution target.  Dispatch goes through
+:mod:`repro.kernels.ops` (``reloc_encode_pack``/``reloc_pack_rows``/
+``reloc_decode_rows``) — never call ``pl.pallas_call`` directly outside
+``kernels/`` (repro-lint RL009).
+
+Jitted kernel instances are cached per static shape in a bounded
+:class:`LRUCache` so long elastic runs (where the place count changes
+on every resize) cannot grow the cache without bound.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..compat import tpu_compiler_params
+
+__all__ = ["LRUCache", "encode_pack", "pack_rows", "decode_rows",
+           "kernel_cache_info", "jax_safe_dtype"]
+
+
+class LRUCache:
+    """Tiny bounded mapping for jitted-callable caches.
+
+    ``get`` refreshes recency, ``put`` evicts the least-recently-used
+    entry past ``cap`` and counts evictions — the counter is the signal
+    a long elastic run is thrashing its specializations (every resize
+    changes ``n``) rather than silently leaking compiled programs.
+    """
+
+    def __init__(self, cap: int):
+        self.cap = max(int(cap), 1)
+        self._d: OrderedDict = OrderedDict()
+        self.evictions = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        try:
+            val = self._d[key]
+        except KeyError:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return val
+
+    def put(self, key, val) -> None:
+        self._d[key] = val
+        self._d.move_to_end(key)
+        while len(self._d) > self.cap:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def info(self) -> dict:
+        return {"size": len(self._d), "cap": self.cap,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+_CACHE = LRUCache(int(os.environ.get("REPRO_KERNEL_CACHE_CAP", "64")))
+
+
+def kernel_cache_info() -> dict:
+    """Size/hit/eviction counters of the module's jit-instance cache."""
+    return _CACHE.info()
+
+
+def jax_safe_dtype(dt) -> bool:
+    """Can ``dt`` ride a ``jnp.asarray`` round trip bit-exactly under
+    the default (x64-off) config?  float64/int64 silently downcast, and
+    object dtypes are pointers — both must take the byte-view path."""
+    dt = np.dtype(dt)
+    if dt.hasobject or dt.kind not in "fiu":
+        return False
+    if dt.itemsize > 4:
+        import jax
+
+        return bool(jax.config.jax_enable_x64)
+    return True
+
+
+# ---------------------------------------------------------------------------
+# fused encode+pack: chunk matrix -> (pairs, slots, width) send buffer
+# ---------------------------------------------------------------------------
+def _encode_pack_kernel(idx_ref, wid_ref, src_ref, o_ref, *,
+                        slots: int, width: int, nb: int):
+    pair = pl.program_id(0)
+    isz = src_ref.dtype.itemsize
+    k = src_ref.shape[1]
+
+    def body(r, carry):
+        i = idx_ref[pair * slots + r]
+        w = wid_ref[pair * slots + r]
+        row = pl.load(src_ref, (pl.dslice(i, 1), slice(None)))   # (1, k)
+        if isz == 1:
+            u8 = jax.lax.bitcast_convert_type(row, jnp.uint8)
+        else:
+            u8 = jax.lax.bitcast_convert_type(row, jnp.uint8) \
+                .reshape(1, k * isz)
+        if width > nb:
+            u8 = jnp.pad(u8, ((0, 0), (0, width - nb)))
+        keep = jax.lax.broadcasted_iota(jnp.int32, (1, width), 1) < w
+        pl.store(o_ref, (pl.dslice(0, 1), pl.dslice(r, 1),
+                         pl.dslice(0, width)),
+                 jnp.where(keep, u8, 0)[None])
+        return carry
+
+    jax.lax.fori_loop(0, slots, body, 0)
+
+
+def _encode_pack_call(pairs: int, slots: int, width: int, nb: int,
+                      m: int, k: int, dtype, interpret: bool):
+    key = ("enc", pairs, slots, width, nb, m, k, str(dtype), interpret)
+    fn = _CACHE.get(key)
+    if fn is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,          # slot->row index, slot width
+            grid=(pairs,),
+            in_specs=[pl.BlockSpec((m, k), lambda p, idx, wid: (0, 0))],
+            out_specs=pl.BlockSpec((1, slots, width),
+                                   lambda p, idx, wid: (p, 0, 0)),
+        )
+        kern = functools.partial(_encode_pack_kernel, slots=slots,
+                                 width=width, nb=nb)
+        call = pl.pallas_call(
+            kern,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((pairs, slots, width),
+                                           jnp.uint8),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("arbitrary",)),
+            interpret=interpret,
+            name="reloc_encode_pack",
+        )
+        fn = jax.jit(lambda idx, wid, src: call(idx, wid, src))
+        _CACHE.put(key, fn)
+    return fn
+
+
+def encode_pack(mat, idx, widths, *, pairs: int, slots: int, width: int,
+                interpret: bool = False):
+    """Rows of ``mat`` (any dtype) → bucketed uint8 send buffer.
+
+    ``mat``: (m, k) chunk rows; ``idx``: (pairs*slots,) int32 source-row
+    index per buffer slot (clamped; ignored where ``widths`` is 0);
+    ``widths``: (pairs*slots,) int32 — ``k*itemsize`` for live slots, 0
+    for empty capacity slots (zero-filled).  Returns
+    ``(pairs, slots, width)`` uint8 — the all_to_all send buffer, with
+    the row bitcast, destination permutation, class padding, and
+    capacity zeroing all applied inside one kernel.
+    """
+    mat = jnp.asarray(mat)
+    m, k = int(mat.shape[0]), int(mat.shape[1])
+    nb = k * mat.dtype.itemsize
+    fn = _encode_pack_call(pairs, slots, width, nb, m, k, mat.dtype,
+                           interpret)
+    return fn(jnp.asarray(idx, jnp.int32), jnp.asarray(widths, jnp.int32),
+              mat)
+
+
+# ---------------------------------------------------------------------------
+# pack of pre-encoded ragged rows: flat byte arena -> send buffer
+# ---------------------------------------------------------------------------
+def _pack_rows_kernel(off_ref, wid_ref, src_ref, o_ref, *,
+                      slots: int, width: int):
+    pair = pl.program_id(0)
+
+    def body(r, carry):
+        off = off_ref[pair * slots + r]
+        w = wid_ref[pair * slots + r]
+        row = pl.load(src_ref, (pl.dslice(off, width),))
+        keep = jax.lax.broadcasted_iota(jnp.int32, (width,), 0) < w
+        pl.store(o_ref, (pl.dslice(0, 1), pl.dslice(r, 1),
+                         pl.dslice(0, width)),
+                 jnp.where(keep, row, 0)[None, None])
+        return carry
+
+    jax.lax.fori_loop(0, slots, body, 0)
+
+
+def _pack_rows_call(pairs: int, slots: int, width: int, arena: int,
+                    interpret: bool):
+    key = ("pack", pairs, slots, width, arena, interpret)
+    fn = _CACHE.get(key)
+    if fn is None:
+        grid_spec = pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,          # slot byte offset, slot width
+            grid=(pairs,),
+            in_specs=[pl.BlockSpec((arena,), lambda p, off, wid: (0,))],
+            out_specs=pl.BlockSpec((1, slots, width),
+                                   lambda p, off, wid: (p, 0, 0)),
+        )
+        kern = functools.partial(_pack_rows_kernel, slots=slots,
+                                 width=width)
+        call = pl.pallas_call(
+            kern,
+            grid_spec=grid_spec,
+            out_shape=jax.ShapeDtypeStruct((pairs, slots, width),
+                                           jnp.uint8),
+            compiler_params=tpu_compiler_params(
+                dimension_semantics=("arbitrary",)),
+            interpret=interpret,
+            name="reloc_pack_rows",
+        )
+        fn = jax.jit(lambda off, wid, src: call(off, wid, src))
+        _CACHE.put(key, fn)
+    return fn
+
+
+def pack_rows(flat_src, offsets, widths, *, pairs: int, slots: int,
+              width: int, interpret: bool = False):
+    """Pre-encoded byte rows → bucketed uint8 send buffer.
+
+    ``flat_src``: 1-D uint8 arena holding every row's bytes back to
+    back, padded by ≥ ``width`` trailing zeros so the fixed-size load
+    of the last row never reads past the end; ``offsets``/``widths``:
+    (pairs*slots,) int32 byte offset and valid byte count per buffer
+    slot (width 0 → zero slot).  Returns ``(pairs, slots, width)``
+    uint8.
+    """
+    flat_src = jnp.asarray(flat_src, jnp.uint8)
+    fn = _pack_rows_call(pairs, slots, width, int(flat_src.shape[0]),
+                         interpret)
+    return fn(jnp.asarray(offsets, jnp.int32),
+              jnp.asarray(widths, jnp.int32), flat_src)
+
+
+# ---------------------------------------------------------------------------
+# fused unpack+decode: received wire rows -> chunk matrix
+# ---------------------------------------------------------------------------
+def _decode_kernel(x_ref, o_ref, *, nb: int, k: int):
+    m = x_ref.shape[0]
+    isz = o_ref.dtype.itemsize
+    u8 = x_ref[:, :nb]
+    if isz == 1:
+        o_ref[...] = jax.lax.bitcast_convert_type(
+            u8.reshape(m, k), o_ref.dtype)
+    else:
+        o_ref[...] = jax.lax.bitcast_convert_type(
+            u8.reshape(m, k, isz), o_ref.dtype)
+
+
+def _decode_call(m: int, w: int, nb: int, k: int, dtype, interpret: bool):
+    key = ("dec", m, w, nb, k, str(np.dtype(dtype)), interpret)
+    fn = _CACHE.get(key)
+    if fn is None:
+        kern = functools.partial(_decode_kernel, nb=nb, k=k)
+        call = pl.pallas_call(
+            kern,
+            out_shape=jax.ShapeDtypeStruct((m, k), jnp.dtype(dtype)),
+            interpret=interpret,
+            name="reloc_decode_rows",
+        )
+        fn = jax.jit(lambda x: call(x))
+        _CACHE.put(key, fn)
+    return fn
+
+
+def decode_rows(rows, *, nbytes: int, dtype, interpret: bool = False):
+    """A delivered ``(m, W)`` uint8 wire block → ``(m, k)`` typed rows.
+
+    The manifest's row width (``nbytes``) and dtype are baked in as
+    static kernel params: the class padding beyond ``nbytes`` is
+    trimmed and the bytes bitcast back in one fused step — the
+    receiver-side inverse of :func:`encode_pack`.
+    """
+    rows = jnp.asarray(rows)
+    m, w = int(rows.shape[0]), int(rows.shape[1])
+    dt = np.dtype(dtype)
+    k = nbytes // dt.itemsize
+    fn = _decode_call(m, w, int(nbytes), k, dt, interpret)
+    return fn(rows)

@@ -71,3 +71,10 @@ def blocking_recv_loop(conns):
     for c in conns:
         out.append(c.recv())                         # EXPECT: RL008
     return out
+
+
+def inline_kernel(kern, x):
+    # a raw Pallas kernel in data-plane code: the ops dispatch (and its
+    # interpret/XLA fallback) never sees it
+    call = pl.pallas_call(kern, out_shape=x)         # EXPECT: RL009
+    return call(x)

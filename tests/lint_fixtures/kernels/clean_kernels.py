@@ -1,0 +1,11 @@
+"""Negative RL009 fixture: this file lives under a ``kernels``
+directory, the one place a raw ``pl.pallas_call`` is allowed (the
+kernel library is what the ``kernels.ops`` dispatch routes *to*).
+Reference data — never imported."""
+import jax
+from jax.experimental import pallas as pl
+
+
+def fused_codec_call(kern, shape):
+    return pl.pallas_call(
+        kern, out_shape=jax.ShapeDtypeStruct(shape, "uint8"))

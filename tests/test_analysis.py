@@ -50,6 +50,12 @@ class TestLintGolden:
     def test_clean_fixture_produces_no_findings(self):
         assert lint.lint_file(f"{FIXTURES}/clean.py") == []
 
+    def test_pallas_call_allowed_under_kernels_dir(self):
+        # same call shape the flagged fixture trips RL009 on — path
+        # under a kernels/ directory makes it the sanctioned home
+        assert lint.lint_file(
+            f"{FIXTURES}/kernels/clean_kernels.py") == []
+
     def test_src_tree_is_lint_clean(self):
         # the CI gate, asserted in-repo: the linter ships green
         assert lint.lint_paths(["src"]) == []
@@ -84,6 +90,14 @@ class TestLintRules:
         f = lint.lint_source("import json\n", path="x.py")[0]
         assert f.github().startswith("::error file=x.py,line=1,")
         assert "RL007" in f.github()
+
+    def test_pallas_call_flagged_by_path(self):
+        src = "y = pl.pallas_call(k, out_shape=s)(x)\n"
+        out = lint.lint_source(src, path="src/repro/core/transport.py")
+        assert [f.code for f in out] == ["RL009"]
+        # any path component named kernels sanctions it
+        assert lint.lint_source(
+            src, path="src/repro/kernels/reloc_codec.py") == []
 
 
 class TestLintCLI:

@@ -191,19 +191,28 @@ class TestMetrics:
 
     def test_transport_stats_merge_and_as_dict(self):
         a = TransportStats(kind="device", payloads=2, local=1, rows=10,
-                           row_bytes=80, wire_bytes=128, width=16,
-                           exchanges=1)
+                           row_bytes=80, wire_bytes=128,
+                           pad_waste_bytes=48, width=16, exchanges=1,
+                           codec_backend="xla")
         b = TransportStats(kind="device", payloads=3, rows=5, row_bytes=40,
-                           wire_bytes=64, width=8, exchanges=2)
+                           wire_bytes=64, pad_waste_bytes=24, width=8,
+                           exchanges=2, codec_backend="pallas_interpret")
         out = a.merge(b)
         assert out is a                     # merge returns self
         assert (a.payloads, a.local, a.rows) == (5, 1, 15)
         assert (a.row_bytes, a.wire_bytes, a.exchanges) == (120, 192, 3)
+        assert a.pad_waste_bytes == 72
         assert a.width == 16                # high-water mark, not a sum
+        assert a.codec_backend == "pallas_interpret"   # latest window
+        # an empty backend never clobbers a recorded one
+        a.merge(TransportStats(kind="device"))
+        assert a.codec_backend == "pallas_interpret"
         d = a.as_dict("t.")
         assert d == {"t.payloads": 5, "t.local": 1, "t.rows": 15,
                      "t.row_bytes": 120, "t.wire_bytes": 192,
-                     "t.width": 16, "t.exchanges": 3}
+                     "t.pad_waste_bytes": 72, "t.width": 16,
+                     "t.exchanges": 3,
+                     "t.codec_backend": "pallas_interpret"}
 
 
 # ---------------------------------------------------------------------------
